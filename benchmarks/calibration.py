@@ -1,0 +1,109 @@
+"""Calibration pass: measure the real host-side costs on THIS machine.
+
+Feeds repro.sim (DESIGN.md §2): every simulator cost constant is either
+measured here or an explicitly documented scaling assumption (the
+``rust_factor`` maps our pure-Python BPE throughput to the HF Rust
+tokenizer class the paper uses).
+"""
+from __future__ import annotations
+
+import json
+import statistics as st
+import time
+from pathlib import Path
+
+from repro.core.shm_broadcast import ShmBroadcastQueue
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
+from repro.tokenizer.bpe import default_tokenizer
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def bench_tokenizer(n_repeat: int = 3) -> dict:
+    tok = default_tokenizer()
+    text = ("the quick brown fox jumps over the lazy dog and then "
+            "tokenization consumes substantial cpu cycles today ") * 200
+    # warm
+    ids = tok.encode(text)
+    best = float("inf")
+    for _ in range(n_repeat):
+        t0 = time.perf_counter()
+        ids = tok.encode(text)
+        best = min(best, time.perf_counter() - t0)
+    rate = len(ids) / best
+    return {"python_bpe_tokens_per_s": rate, "sample_tokens": len(ids),
+            # HF Rust tokenizers measure ~0.1-0.3 MtokS/core on long texts;
+            # the simulator's paper-scale runs use 200k (documented).
+            "rust_factor_assumed": round(200_000.0 / rate, 2)}
+
+
+def bench_scheduler(n_requests: int = 64, n_steps: int = 200) -> dict:
+    sched = Scheduler(SchedulerConfig())
+    for i in range(n_requests):
+        r = Request(text="", max_new_tokens=16)
+        r.prompt_tokens = list(range(i << 20, (i << 20) + 512))
+        sched.add_request(r)
+    costs = []
+    for _ in range(n_steps):
+        t0 = time.perf_counter()
+        plan = sched.schedule()
+        costs.append(time.perf_counter() - t0)
+        if plan is None:
+            break
+        sched.complete_step(plan, time.perf_counter())
+    return {"sched_p50_us": st.median(costs) * 1e6,
+            "sched_max_us": max(costs) * 1e6, "n_steps": len(costs)}
+
+
+def bench_ring_uncontended(n_msgs: int = 2000) -> dict:
+    q = ShmBroadcastQueue.create(n_readers=1, n_slots=8, slot_bytes=4096)
+    try:
+        w = q.writer()
+        r = q.reader(0)
+        payload = StepPlan(1, [(1, 0, 2048)], list(range(32)), []).encode()
+        enq, deq = [], []
+        for _ in range(n_msgs):
+            s = w.enqueue(payload)
+            enq.append(s.wall_s)
+            _, s2 = r.dequeue()
+            deq.append(s2.wall_s)
+        return {"enqueue_p50_us": st.median(enq) * 1e6,
+                "dequeue_p50_us": st.median(deq) * 1e6,
+                "payload_bytes": len(payload)}
+    finally:
+        q.close()
+
+
+def bench_plan_codec(n: int = 2000) -> dict:
+    plan = StepPlan(7, [(i, 0, 2048) for i in range(8)], list(range(64)), [])
+    t0 = time.perf_counter()
+    for _ in range(n):
+        raw = plan.encode()
+        StepPlan.decode_bytes(raw)
+    return {"codec_us": (time.perf_counter() - t0) / n * 1e6}
+
+
+def run(write: bool = True) -> dict:
+    out = {
+        "tokenizer": bench_tokenizer(),
+        "scheduler": bench_scheduler(),
+        "ring": bench_ring_uncontended(),
+        "codec": bench_plan_codec(),
+    }
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "calibration.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def main() -> None:
+    out = run()
+    for section, vals in out.items():
+        for k, v in vals.items():
+            print(f"calibration.{section}.{k},{v:.3f}" if isinstance(v, float)
+                  else f"calibration.{section}.{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Figs. 7 & 9: victim TTFT under attacker load, cores x RPS x SL x TP.
+
+Simulator sweep (calibrated DES; cores 5..64 are impossible natively on
+this 1-core box).  Reports per-config victim TTFTs (first victim +
+completed-victim mean), timeout counts, and the Fig. 9 speedup heatmap of
+best CPU-abundant config vs the least-CPU case ((#GPUs+1) cores).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Optional
+
+from repro.sim.serving import attacker_victim_workload, llama8b_tp4_params
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def core_levels(tp: int):
+    return [tp + 1, 2 * tp, 4 * tp, 8 * tp]
+
+
+def one_cell(cores: int, tp: int, rps: float, attacker_tokens: int,
+             duration: float = 45.0) -> dict:
+    p = llama8b_tp4_params(cores, tp=tp)
+    res = attacker_victim_workload(
+        p, attacker_rps=rps, attacker_tokens=attacker_tokens,
+        n_victims=5, duration=duration, horizon=duration + 260.0)
+    tt = res.victim_ttfts()
+    done = [t for t in tt if t is not None and t < p.timeout]
+    return {
+        "cores": cores, "tp": tp, "rps": rps, "attacker_sl": attacker_tokens,
+        "victim_ttfts": [round(t, 2) if t is not None else None for t in tt],
+        "first_victim_ttft": round(tt[0], 2) if tt and tt[0] else None,
+        "mean_completed_ttft": (round(sum(done) / len(done), 2)
+                                if done else None),
+        "timeouts": sum(1 for t in tt if t is None or t >= p.timeout),
+        "saturation_s": round(res.saturation_s, 1),
+    }
+
+
+def run(write: bool = True, fast: bool = False) -> dict:
+    sweeps = []
+    tps = (4,) if fast else (4, 8)
+    rpss = (8,) if fast else (8, 16)
+    sls = (114_000,) if fast else (1_800, 14_000, 114_000)
+    for tp in tps:
+        for rps in rpss:
+            for sl in sls:
+                for cores in core_levels(tp):
+                    sweeps.append(one_cell(cores, tp, rps, sl))
+
+    # Fig 9: best speedup of CPU-abundant configs vs least-CPU
+    heat = []
+    for tp in tps:
+        for rps in rpss:
+            for sl in sls:
+                cells = [c for c in sweeps
+                         if c["tp"] == tp and c["rps"] == rps
+                         and c["attacker_sl"] == sl]
+                base = next(c for c in cells if c["cores"] == tp + 1)
+                rich = [c for c in cells if c["cores"] != tp + 1]
+                b = base["first_victim_ttft"]
+                rs = [c["first_victim_ttft"] for c in rich
+                      if c["first_victim_ttft"]]
+                if b is None:
+                    speed = "inf (least-CPU timed out)"
+                elif rs:
+                    speed = round(b / min(rs), 2)
+                else:
+                    speed = None
+                heat.append({"tp": tp, "rps": rps, "attacker_sl": sl,
+                             "speedup_best_vs_least": speed})
+    out = {"cells": sweeps, "fig9_speedups": heat}
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "fig7_attacker_victim.json").write_text(
+            json.dumps(out, indent=1))
+    return out
+
+
+def main(fast: bool = False) -> None:
+    out = run(fast=fast)
+    print("tp,rps,attacker_sl,cores,first_ttft,mean_ttft,timeouts,sat_s")
+    for c in out["cells"]:
+        print(f"{c['tp']},{c['rps']},{c['attacker_sl']},{c['cores']},"
+              f"{c['first_victim_ttft']},{c['mean_completed_ttft']},"
+              f"{c['timeouts']},{c['saturation_s']}")
+    print("-- fig9 speedups (best abundant vs least-CPU) --")
+    for h in out["fig9_speedups"]:
+        print(f"tp={h['tp']} rps={h['rps']} sl={h['attacker_sl']}: "
+              f"{h['speedup_best_vs_least']}x")
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

@@ -1,0 +1,54 @@
+"""Fig. 8: sequential-victim TTFT growth under sustained attacker load.
+
+Five victims issued back-to-back (next starts when the previous finishes
+or times out) while attackers arrive at fixed RPS with 114k-token prompts.
+Expected shape (paper): TTFT grows with victim index as attacker requests
+accumulate; larger CPU allocations flatten the curve; the least-CPU
+configuration hits the 200 s timeout (red x in the paper).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.sim.serving import attacker_victim_workload, llama8b_tp4_params
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def run(write: bool = True, fast: bool = False) -> dict:
+    tp = 4
+    rows = []
+    rpss = (8,) if fast else (8, 16)
+    for rps in rpss:
+        for cores in (tp + 1, 2 * tp, 4 * tp, 8 * tp):
+            p = llama8b_tp4_params(cores, tp=tp)
+            res = attacker_victim_workload(
+                p, attacker_rps=rps, attacker_tokens=114_000, n_victims=5,
+                duration=60.0, horizon=320.0)
+            tt = res.victim_ttfts()
+            rows.append({
+                "rps": rps, "cores": cores,
+                "victim_ttfts": [
+                    round(t, 2) if t is not None and t < p.timeout
+                    else "TIMEOUT" for t in tt],
+            })
+    out = {"tp": tp, "rows": rows}
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "fig8_sequential_victims.json").write_text(
+            json.dumps(out, indent=1))
+    return out
+
+
+def main(fast: bool = False) -> None:
+    out = run(fast=fast)
+    print("rps,cores,v1,v2,v3,v4,v5")
+    for r in out["rows"]:
+        print(f"{r['rps']},{r['cores']}," + ",".join(
+            str(v) for v in r["victim_ttfts"]))
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

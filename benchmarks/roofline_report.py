@@ -1,0 +1,68 @@
+"""Roofline report: aggregates artifacts/dryrun/*.json into the §Roofline
+table (per arch x cell x mesh: three terms, dominant bottleneck, useful
+fraction, one-line lever)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+DRYRUN = ARTIFACTS / "dryrun"
+
+LEVERS = {
+    "compute_s": "raise MFU: bigger MXU tiles / fewer remat recomputes",
+    "memory_s": "cut HBM traffic: fuse, shrink temps, quantize KV",
+    "collective_s": "reshard: fewer/smaller collectives, overlap with compute",
+}
+
+
+def load_records():
+    recs = []
+    if DRYRUN.exists():
+        for p in sorted(DRYRUN.glob("*.json")):
+            recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def table(recs) -> str:
+    lines = [
+        "| mesh | arch | cell | compute_s | mem_s(hlo) | mem_s(tpu-est) |"
+        " coll_s | bound(tpu) | rf(tpu) | useful | lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        dom = t.get("dominant_tpu", t["dominant"])
+        rf = t.get("roofline_fraction_tpu", t["roofline_fraction"])
+        lines.append(
+            f"| {r['mesh']} | {r['arch']} | {r['cell']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t.get('memory_s_tpu_est', float('nan')):.2e} "
+            f"| {t['collective_s']:.2e} | {dom.replace('_s','')} "
+            f"| {rf:.2f} "
+            f"| {min(t.get('useful_fraction', 0), 9.99):.2f} "
+            f"| {LEVERS[dom if dom in LEVERS else t['dominant']]} |")
+    return "\n".join(lines)
+
+
+def run(write: bool = True) -> dict:
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skips = [r for r in recs if r.get("status") == "skip"]
+    md = table(recs)
+    out = {"n_ok": len(ok), "n_skip": len(skips), "markdown": md}
+    if write and ok:
+        (ARTIFACTS / "roofline_table.md").write_text(md + "\n")
+    return out
+
+
+def main() -> None:
+    out = run()
+    print(out["markdown"])
+    print(f"\n{out['n_ok']} cells ok, {out['n_skip']} documented skips")
+
+
+if __name__ == "__main__":
+    main()

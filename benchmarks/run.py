@@ -1,0 +1,66 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Each section prints its own CSV block; artifacts land in ./artifacts/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(name: str):
+    print(f"\n===== {name} =====")
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    t0 = time.time()
+
+    from benchmarks import calibration
+    _section("calibration (real host costs on this box)")
+    calibration.main()
+
+    from benchmarks import fig5_tokenization
+    _section("fig5: tokenization share of TTFT")
+    fig5_tokenization.main()
+
+    from benchmarks import fig7_attacker_victim
+    _section("fig7+9: attacker/victim TTFT vs cores (sim sweep)")
+    fig7_attacker_victim.main(fast=True)
+
+    from benchmarks import fig8_sequential_victims
+    _section("fig8: sequential victim TTFT growth")
+    fig8_sequential_victims.main(fast=fast)
+
+    from benchmarks import fig10_utilization
+    _section("fig10-11: CPU saturation duration / device idleness")
+    fig10_utilization.main(fast=fast)
+
+    from benchmarks import fig12_dispatch_barrier
+    _section("fig12: dispatch serialization + barrier amplification (real)")
+    fig12_dispatch_barrier.main()
+
+    from benchmarks import fig13_shm_dequeue
+    _section("fig13: shm broadcast dequeue contention (real + sim)")
+    fig13_shm_dequeue.main()
+
+    from benchmarks import fig34_cluster_cdf
+    _section("fig3-4: cluster allocation CDFs (synthetic, paper-matched)")
+    fig34_cluster_cdf.main()
+
+    from benchmarks import fusion_ablation
+    _section("beyond-paper: fused multi-step decode (persistent-kernel "
+             "analogue)")
+    fusion_ablation.main()
+
+    from benchmarks import roofline_report
+    _section("roofline table (from dry-run artifacts)")
+    roofline_report.main()
+
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Core-count what-if: how many CPU cores does YOUR serving config need?
+
+  PYTHONPATH=src python examples/core_sweep_sim.py --tp 8 --rps 8
+
+The provisioning-advisor example (paper §VI-A): sweeps CPU core budgets in
+the calibrated simulator and reports the knee — the smallest allocation
+within 10% of the asymptotic victim TTFT — plus the cost framing (cores
+are ~100-1600x cheaper than the accelerators they keep busy).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.sim.serving import attacker_victim_workload, llama8b_tp4_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--rps", type=float, default=8.0)
+    ap.add_argument("--attack-tokens", type=int, default=114_000)
+    args = ap.parse_args()
+
+    levels = [args.tp + 1, 2 * args.tp, 4 * args.tp, 8 * args.tp,
+              16 * args.tp]
+    rows = []
+    for cores in levels:
+        p = llama8b_tp4_params(cores, tp=args.tp)
+        res = attacker_victim_workload(
+            p, attacker_rps=args.rps, attacker_tokens=args.attack_tokens,
+            n_victims=1, duration=15.0, horizon=260.0)
+        t = res.victim_ttfts()[0]
+        rows.append((cores, t))
+        print(f"cores={cores:4d}  victim TTFT="
+              f"{'TIMEOUT' if t is None else f'{t:6.2f}s'}  "
+              f"cpu-saturation={res.saturation_s:5.1f}s")
+
+    best = min((t for _, t in rows if t is not None), default=None)
+    if best is not None:
+        knee = next(c for c, t in rows if t is not None and t <= 1.1 * best)
+        print(f"\nadvice: allocate >= {knee} cores "
+              f"({knee / args.tp:.0f} per accelerator) for this workload —")
+        print("marginal core cost is ~$0.05/h vs ~$7/h per accelerator "
+              "(paper §VI-A: a 1.5% spend removes the bottleneck).")
+
+
+if __name__ == "__main__":
+    main()

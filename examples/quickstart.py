@@ -1,0 +1,69 @@
+"""Quickstart: build a tiny model, prefill a prompt, decode a few tokens.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch qwen2-0.5b]
+
+Uses the public API only: configs registry -> init_params -> prefill ->
+decode_step, with the real BPE tokenizer.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.train import tiny_config
+from repro.models import model as M
+from repro.tokenizer.bpe import default_tokenizer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    tok = default_tokenizer()
+    cfg = tiny_config(get_config(args.arch), vocab=tok.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    prompt = "the quick brown fox"
+    ids = tok.encode(prompt, add_bos=True)
+    print(f"arch={cfg.name} prompt={prompt!r} -> {len(ids)} tokens")
+
+    total = len(ids) + args.new_tokens
+    toks = jnp.asarray(ids, jnp.int32)[None]
+    extras = {}
+    if cfg.family == "vlm":
+        extras["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(toks.shape[1]), (3, 1, toks.shape[1]))
+    if cfg.family == "audio":
+        extras["frames"] = jnp.zeros(
+            (1, cfg.encdec.n_encoder_ctx, cfg.d_model), cfg.param_dtype())
+
+    logits, cache = M.prefill(params, cfg, toks, extras)
+    # grow the prefill cache to hold the new tokens
+    specs = M.cache_specs(cfg, 1, total)
+    cache = jax.tree.map(
+        lambda c, s: jnp.pad(c, [(0, d - g) for g, d in
+                                 zip(c.shape, s.shape)]), cache, specs)
+
+    out = list(ids)
+    for i in range(args.new_tokens):
+        nxt = int(jnp.argmax(logits[0, -1, : tok.vocab_size]))
+        out.append(nxt)
+        step_extras = {}
+        if cfg.family == "vlm":
+            step_extras["mrope_positions"] = jnp.full((3, 1, 1), len(out) - 1)
+        logits, cache = M.decode_step(
+            params, cfg, jnp.asarray([[nxt]], jnp.int32), cache,
+            jnp.int32(len(out) - 1), step_extras)
+
+    print("generated ids:", out[len(ids):])
+    print("decoded text :", repr(tok.decode(out)))
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

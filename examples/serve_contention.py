@@ -1,0 +1,64 @@
+"""The paper's attacker/victim experiment on the REAL multi-process engine.
+
+  PYTHONPATH=src python examples/serve_contention.py
+
+Runs the instrumented control plane (tokenizer pool -> EngineCore -> shm
+broadcast ring -> TP workers) twice on this box: once idle (victim alone),
+once under attacker load, and prints the victim TTFT degradation plus the
+contended dequeue statistics (the live, small-scale analogue of Figs 7/13;
+the calibrated simulator in benchmarks/ scales this to 5..64 cores).
+"""
+from __future__ import annotations
+
+import statistics as st
+import time
+
+from repro.core.devmodel import DeviceModel
+from repro.core.engine import EngineConfig, ServingSystem
+
+
+def run_once(attackers: int, label: str) -> dict:
+    cfg = EngineConfig(
+        tp_degree=2, pool_width=4,
+        device=DeviceModel(t_fixed=5e-4, t_prefill_tok=2e-7,
+                           t_decode_seq=1e-5),
+        yield_every=64,
+    )
+    sys_ = ServingSystem(cfg).start()
+    attacker_text = "tokenize me repeatedly please " * 600
+    victim_text = "short victim request " * 40
+    try:
+        for _ in range(attackers):
+            sys_.submit(attacker_text, max_new_tokens=2)
+        time.sleep(0.05)
+        vid = sys_.submit(victim_text, max_new_tokens=4, is_victim=True)
+        results = sys_.collect(attackers + 1, timeout=120.0)
+        victim = results[vid]
+    finally:
+        stats = sys_.shutdown()
+    dq = [w for s in stats if s["role"].startswith("worker")
+          for w in s["dequeue_wall"]]
+    rec = {
+        "label": label,
+        "victim_ttft_ms": (victim["t_first_token"] - victim["t_arrival"]) * 1e3,
+        "victim_tokenize_ms":
+            (victim["t_tokenize_done"] - victim["t_tokenize_start"]) * 1e3,
+        "dequeue_p95_ms":
+            sorted(dq)[int(0.95 * (len(dq) - 1))] * 1e3 if dq else 0.0,
+    }
+    print(f"[{label}] victim TTFT={rec['victim_ttft_ms']:.1f}ms "
+          f"tokenize={rec['victim_tokenize_ms']:.1f}ms "
+          f"dequeue_p95={rec['dequeue_p95_ms']:.2f}ms")
+    return rec
+
+
+def main() -> None:
+    quiet = run_once(0, "no-load")
+    loaded = run_once(12, "attacker-load")
+    slow = loaded["victim_ttft_ms"] / max(quiet["victim_ttft_ms"], 1e-9)
+    print(f"victim TTFT degradation under attacker load: {slow:.2f}x "
+          f"(paper: CPU-starved configs degrade 1.36-5.40x and beyond)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.cluster.logs import (
+    AllocRecord,
+    gpu_hour_weighted_cdf,
+    parse_salloc_log,
+    synthesize_cluster_log,
+)
+
+__all__ = ["AllocRecord", "gpu_hour_weighted_cdf", "parse_salloc_log",
+           "synthesize_cluster_log"]

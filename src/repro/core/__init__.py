@@ -1,0 +1,17 @@
+"""The paper's primary contribution: the instrumented CPU control plane."""
+from repro.core.devmodel import DeviceModel
+from repro.core.engine import EngineConfig, ServingSystem
+from repro.core.shm_broadcast import (
+    CompletionBoard,
+    OpStats,
+    ShmBroadcastQueue,
+)
+
+__all__ = [
+    "CompletionBoard",
+    "DeviceModel",
+    "EngineConfig",
+    "OpStats",
+    "ServingSystem",
+    "ShmBroadcastQueue",
+]

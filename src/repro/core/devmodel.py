@@ -1,0 +1,39 @@
+"""Device step-time model.
+
+On real hardware the worker's step time comes from the accelerator; in this
+container the workers *emulate* it (time.sleep) with a latency model whose
+coefficients are derived from the dry-run roofline terms — so control-plane
+experiments see realistic device-step durations per architecture.
+
+step_time = t_fixed + prefill_tokens * t_prefill_tok + n_decode * t_decode_seq
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.scheduler import StepPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    t_fixed: float = 2e-3           # dispatch + collective latency floor
+    t_prefill_tok: float = 2e-6     # per prefill token
+    t_decode_seq: float = 1e-4      # per decoding sequence
+    max_step: float = 1.0
+
+    def step_time(self, plan: StepPlan) -> float:
+        pre = sum(l for _, _, l in plan.prefill)
+        t = (self.t_fixed + pre * self.t_prefill_tok
+             + len(plan.decode) * self.t_decode_seq)
+        return min(t, self.max_step)
+
+    @classmethod
+    def from_roofline(cls, bound_s_prefill: float, prefill_tokens: int,
+                      bound_s_decode: float, decode_batch: int,
+                      t_fixed: float = 2e-3) -> "DeviceModel":
+        """Build from two dry-run cells (a prefill cell + a decode cell)."""
+        return cls(
+            t_fixed=t_fixed,
+            t_prefill_tok=bound_s_prefill / max(prefill_tokens, 1),
+            t_decode_seq=bound_s_decode / max(decode_batch, 1),
+        )

@@ -1,0 +1,253 @@
+"""Multi-process LLM serving engine with vLLM-V1's process decomposition.
+
+  client threads -> [API server: tokenizer pool]  (this process)
+       | mp.Queue (the ZMQ analogue)
+  [EngineCore process: continuous-batching scheduler]
+       | ShmBroadcastQueue (1-writer-N-reader, lock-free, busy-wait)
+  [worker process x TP]  --compute-->  CompletionBoard barrier
+       |
+  results mp.Queue -> client
+
+Everything host-side is real (real processes, real /dev/shm ring, real
+tokenizer CPU burn); the accelerator step is emulated from a DeviceModel
+(sleep with roofline-derived duration) since this container has no TPU.
+This is the instrumented system the paper's experiments (Figs 5-13) run on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.devmodel import DeviceModel
+from repro.core.shm_broadcast import CompletionBoard, ShmBroadcastQueue
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
+from repro.tokenizer.bpe import BPETokenizer, default_tokenizer
+from repro.tokenizer.pool import TokenizerPool
+
+_CTX = mp.get_context("fork")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    tp_degree: int = 4                      # N workers = N readers
+    pool_width: int = 4                     # tokenizer threads
+    scheduler: SchedulerConfig = SchedulerConfig()
+    device: DeviceModel = DeviceModel()
+    ring_slots: int = 8
+    ring_slot_bytes: int = 1 << 16
+    yield_every: int = 0                    # 0 = pure busy-wait (vLLM-style)
+    request_timeout: float = 200.0          # the paper's timeout bound
+    # async lookahead scheduling (beyond-paper mitigation, §V-B takeaway):
+    # overlap scheduling/broadcast of step k+1 with device execution of k.
+    async_sched: bool = False
+
+
+def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
+                 board_name: str, stop_ev) -> None:
+    """EngineCore process main loop."""
+    ring = ShmBroadcastQueue.attach(ring_name)
+    writer = ring.writer()
+    board = CompletionBoard.attach(board_name, cfg.tp_degree)
+    sched = Scheduler(cfg.scheduler)
+    reqs: Dict[int, Request] = {}
+    sched_costs: List[float] = []
+    barrier_waits: List[float] = []
+    pending_plan: Optional[StepPlan] = None   # async_sched in-flight step
+
+    def drain_inputs() -> None:
+        while True:
+            try:
+                item = in_q.get_nowait()
+            except queue.Empty:
+                return
+            req = Request(text="", max_new_tokens=item["max_new_tokens"],
+                          req_id=item["req_id"],
+                          is_victim=item["is_victim"])
+            req.prompt_tokens = item["tokens"]
+            req.t_arrival = item["t_arrival"]
+            req.t_tokenize_start = item["t_tokenize_start"]
+            req.t_tokenize_done = item["t_tokenize_done"]
+            reqs[req.req_id] = req
+            sched.add_request(req)
+
+    def finish_step(plan: StepPlan) -> None:
+        barrier = board.wait_all(plan.step_id,
+                                 yield_every=cfg.yield_every)
+        barrier_waits.append(barrier.wall_s)
+        now = time.perf_counter()
+        for req in sched.complete_step(plan, now):
+            out_q.put({
+                "req_id": req.req_id, "is_victim": req.is_victim,
+                "t_arrival": req.t_arrival,
+                "t_tokenize_start": req.t_tokenize_start,
+                "t_tokenize_done": req.t_tokenize_done,
+                "t_first_token": req.t_first_token,
+                "t_done": req.t_done,
+                "n_prompt": req.n_prompt,
+                "n_generated": len(req.generated),
+            })
+
+    while not (stop_ev.is_set() and not sched.has_work
+               and pending_plan is None):
+        drain_inputs()
+        t0 = time.perf_counter()
+        plan = sched.schedule()
+        sched_costs.append(time.perf_counter() - t0)
+        if plan is not None:
+            writer.enqueue(plan.encode(), yield_every=cfg.yield_every)
+        if cfg.async_sched:
+            # lookahead pipeline: wait for the PREVIOUS step while the
+            # workers already received (and execute) the current one.
+            if pending_plan is not None:
+                finish_step(pending_plan)
+            pending_plan = plan
+            if plan is None and pending_plan is None and not sched.has_work:
+                time.sleep(0.0005)
+        else:
+            if plan is None:
+                time.sleep(0.0005)
+                continue
+            finish_step(plan)
+    if pending_plan is not None:
+        finish_step(pending_plan)
+
+    # shutdown: sentinel to workers
+    writer.enqueue(StepPlan(-1, [], [], []).encode())
+    stats_q.put({
+        "role": "engine",
+        "enqueue_wall": [s.wall_s for s in writer.stats],
+        "enqueue_spins": [s.spins for s in writer.stats],
+        "sched_cost": sched_costs,
+        "barrier_wall": barrier_waits,
+    })
+    ring.close()
+    board.close()
+
+
+def _worker(cfg: EngineConfig, idx: int, ring_name: str, board_name: str,
+            stats_q) -> None:
+    """Per-device worker process: dequeue plan -> 'compute' -> barrier mark."""
+    ring = ShmBroadcastQueue.attach(ring_name)
+    reader = ring.reader(idx)
+    board = CompletionBoard.attach(board_name, cfg.tp_degree)
+    dev = cfg.device
+    while True:
+        payload, _ = reader.dequeue(timeout=600.0,
+                                    yield_every=cfg.yield_every)
+        plan = StepPlan.decode_bytes(payload)
+        if plan.step_id < 0:
+            break
+        time.sleep(dev.step_time(plan))   # accelerator executes
+        board.mark(idx, plan.step_id)
+    stats_q.put({
+        "role": f"worker{idx}",
+        "dequeue_wall": [s.wall_s for s in reader.stats],
+        "dequeue_spins": [s.spins for s in reader.stats],
+    })
+    ring.close()
+    board.close()
+
+
+class ServingSystem:
+    """Owner-side orchestrator (plays the API-server role in-process)."""
+
+    def __init__(self, cfg: EngineConfig = EngineConfig(),
+                 tokenizer: Optional[BPETokenizer] = None):
+        self.cfg = cfg
+        self.tokenizer = tokenizer or default_tokenizer()
+        self.ring = ShmBroadcastQueue.create(
+            cfg.tp_degree, cfg.ring_slots, cfg.ring_slot_bytes)
+        self.board = CompletionBoard.create(cfg.tp_degree)
+        self.in_q = _CTX.Queue()
+        self.out_q = _CTX.Queue()
+        self.stats_q = _CTX.Queue()
+        self.stop_ev = _CTX.Event()
+        self.procs: List[mp.Process] = []
+        self.pool: Optional[TokenizerPool] = None
+        self.results: Dict[int, dict] = {}
+        self.stats: List[dict] = []
+        self._next_id = 0
+        self._lock = threading.Lock()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "ServingSystem":
+        eng = _CTX.Process(
+            target=_engine_core,
+            args=(self.cfg, self.in_q, self.out_q, self.stats_q,
+                  self.ring.name, self.board.name, self.stop_ev),
+            daemon=True, name="engine-core")
+        eng.start()
+        self.procs.append(eng)
+        for i in range(self.cfg.tp_degree):
+            w = _CTX.Process(
+                target=_worker,
+                args=(self.cfg, i, self.ring.name, self.board.name,
+                      self.stats_q),
+                daemon=True, name=f"worker-{i}")
+            w.start()
+            self.procs.append(w)
+        # tokenizer threads AFTER forking (fork + threads don't mix)
+        self.pool = TokenizerPool(self.tokenizer, self.cfg.pool_width,
+                                  measure=True)
+        return self
+
+    def submit(self, text: str, max_new_tokens: int = 8,
+               is_victim: bool = False) -> int:
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+        t_arrival = time.perf_counter()
+
+        def tokenize_and_enqueue() -> List[int]:
+            t_tok0 = time.perf_counter()
+            toks = self.tokenizer.encode(text)
+            t_tok1 = time.perf_counter()
+            self.in_q.put({
+                "req_id": rid, "tokens": toks,
+                "max_new_tokens": max_new_tokens, "is_victim": is_victim,
+                "t_arrival": t_arrival, "t_tokenize_start": t_tok0,
+                "t_tokenize_done": t_tok1,
+            })
+            return toks
+
+        if self.pool and self.pool._pool is not None:
+            self.pool._pool.submit(tokenize_and_enqueue)
+        else:
+            tokenize_and_enqueue()
+        return rid
+
+    def collect(self, n: int, timeout: float = 300.0) -> Dict[int, dict]:
+        deadline = time.monotonic() + timeout
+        while len(self.results) < n and time.monotonic() < deadline:
+            try:
+                rec = self.out_q.get(timeout=0.2)
+                self.results[rec["req_id"]] = rec
+            except queue.Empty:
+                continue
+        return self.results
+
+    def shutdown(self, timeout: float = 30.0) -> List[dict]:
+        self.stop_ev.set()
+        deadline = time.monotonic() + timeout
+        for p in self.procs:
+            p.join(max(0.1, deadline - time.monotonic()))
+        while True:
+            try:
+                self.stats.append(self.stats_q.get_nowait())
+            except queue.Empty:
+                break
+        for p in self.procs:
+            if p.is_alive():
+                p.terminate()
+        if self.pool:
+            self.pool.shutdown()
+        self.ring.close()
+        self.board.close()
+        return self.stats

@@ -1,0 +1,112 @@
+"""Pallas TPU decode attention over a (ring- or linear-) KV cache.
+
+One new query token per sequence attends a cache of ``S`` slots.  The
+kernel streams [blk_s, D] cache blocks through VMEM with an online-softmax
+carry — the decode analogue of flash-decoding: HBM reads of the cache
+dominate, so the block size is chosen for full DMA pipelining, and the
+query tile [H_kv-group, D] stays resident.
+
+Layout: q [B, H, D]; k/v caches [B, KV, S, D]; GQA group r = H/KV — query
+heads of one kv head are processed together as the rows of an
+[r, blk_s] MXU tile.  Validity/window masking is positional: slot j holds
+``positions[b, j]``; valid iff 0 <= pos < cache_len (+ window bound).
+
+Grid: (B, KV, n_s_blocks) — s innermost for carry privacy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(clen_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, blk_s: int, scale: float,
+            window: Optional[int], n_sb: int):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                     # [r, D]
+    k = k_ref[0, 0]                                  # [blk_s, D]
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [r, blk_s]
+
+    clen = clen_ref[0]
+    pos = pos_ref[0]                                 # [blk_s]
+    valid = (pos >= 0) & (pos < clen)
+    if window is not None:
+        valid &= pos > clen - 1 - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_cur
+
+    @pl.when(sb == n_sb - 1)
+    def _flush():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(q, k_cache, v_cache, cache_len, positions, *,
+                         window: Optional[int] = None, blk_s: int = 512,
+                         interpret: bool = False):
+    """q: [B, H, D]; caches: [B, KV, S, D]; cache_len: [B] i32;
+    positions: [B, S] i32 (absolute position per slot; -1 = never valid).
+    Returns [B, H, D]."""
+    B, H, D = q.shape
+    _, KV, S, _ = k_cache.shape
+    assert H % KV == 0
+    r = H // KV
+    blk_s = min(blk_s, S)
+    while S % blk_s:
+        blk_s //= 2
+    n_sb = S // blk_s
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, KV, r, D)
+
+    kernel = functools.partial(_kernel, blk_s=blk_s, scale=scale,
+                               window=window, n_sb=n_sb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_sb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, g, sb: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, blk_s), lambda b, g, sb: (b, sb)),
+            pl.BlockSpec((1, r, D), lambda b, g, sb: (b * KV + g, 0, 0)),
+            pl.BlockSpec((1, 1, blk_s, D), lambda b, g, sb: (b, g, sb, 0)),
+            pl.BlockSpec((1, 1, blk_s, D), lambda b, g, sb: (b, g, sb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, D), lambda b, g, sb: (b * KV + g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, r, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((r, D), jnp.float32),
+            pltpu.VMEM((r,), jnp.float32),
+            pltpu.VMEM((r,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len, positions, qg.reshape(B * KV, r, D), k_cache, v_cache)
+    return out.reshape(B, H, D)

@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (prefill/train path).
+
+TPU adaptation of the FlashAttention tiling: the (q-block x kv-block) score
+tile lives in VMEM, streamed against HBM-resident K/V blocks; online
+softmax keeps [blk_q] running (m, l) statistics and a [blk_q, D] f32
+accumulator in VMEM scratch.  The MXU sees [blk_q, D] x [D, blk_k] and
+[blk_q, blk_k] x [blk_k, D] matmuls with hardware-aligned tiles
+(block sizes are multiples of 128).
+
+Layout: q [BH, S, D]; k/v [BKV, S, D]; GQA ratio r = H/KV resolved in the
+grid index map (query head h reads kv head h // r).  Causal and
+sliding-window masking are applied per-tile from absolute positions.
+
+Grid: (BH, n_q_blocks, n_kv_blocks) — the kv axis is innermost, so the
+scratch carry (acc, m, l) is private to each (bh, qb) and flushed on the
+last kv block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            blk_q: int, blk_k: int, scale: float, causal: bool,
+            window: Optional[int], n_kb: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                    # [blk_q, D]
+    k = k_ref[0]                                    # [blk_k, D]
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [blk_q, blk_k]
+
+    qpos = qb * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = kb * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # [blk_q]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])                 # [blk_q, blk_k]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_cur
+
+    @pl.when(kb == n_kb - 1)
+    def _flush():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         blk_q: int = 256, blk_k: int = 512,
+                         interpret: bool = False):
+    """q: [BH, S, D]; k, v: [BKV, S, D]; returns [BH, S, D]."""
+    BH, S, D = q.shape
+    BKV = k.shape[0]
+    assert BH % BKV == 0, (BH, BKV)
+    r = BH // BKV
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, S)
+    while S % blk_q:
+        blk_q //= 2
+    while S % blk_k:
+        blk_k //= 2
+    n_qb, n_kb = S // blk_q, S // blk_k
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, blk_q=blk_q, blk_k=blk_k, scale=scale, causal=causal,
+        window=window, n_kb=n_kb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, D), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda bh, qb, kb: (bh // r, kb, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda bh, qb, kb: (bh // r, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, D), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, D), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,75 @@
+"""Pallas TPU selective-scan (Mamba-1) kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of warp-level shuffles,
+the recurrence h_t = a_t * h_{t-1} + b_t runs as a VPU-resident
+``fori_loop`` over time with the [blk_d, N] state held in VMEM scratch —
+the channel dimension is blocked across the grid (channels are fully
+independent), so each grid cell owns a [T, blk_d] slab of dt/x/B/C in VMEM
+and never touches HBM mid-scan.
+
+Inputs (per layer, post-conv):
+  x      [B, T, Di]   (conv'd, silu'd activations, f32)
+  dt     [B, T, Di]   (softplus'd step sizes, f32)
+  Bt, Ct [B, T, N]    (input/output projections, f32)
+  A      [Di, N]      (negative decay rates)
+Output: y [B, T, Di] with y_t = C_t . h_t  (the D-skip term is applied by
+the caller, matching ssm.mamba1_mix).
+
+Grid: (B, Di / blk_d).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, o_ref, h_ref, *, T: int):
+    h_ref[...] = jnp.zeros_like(h_ref)
+    a = a_ref[...]                                   # [blk_d, N]
+
+    def step(t, _):
+        dt_t = dt_ref[0, t]                          # [blk_d]
+        x_t = x_ref[0, t]                            # [blk_d]
+        bt = b_ref[0, t]                             # [N]
+        ct = c_ref[0, t]                             # [N]
+        da = jnp.exp(dt_t[:, None] * a)              # [blk_d, N]
+        h = h_ref[...] * da + (dt_t * x_t)[:, None] * bt[None, :]
+        h_ref[...] = h
+        o_ref[0, t] = h @ ct                         # [blk_d]
+        return 0
+
+    jax.lax.fori_loop(0, T, step, 0)
+
+
+def mamba1_scan(x, dt, Bt, Ct, A, *, blk_d: int = 512,
+                interpret: bool = False):
+    """x, dt: [B, T, Di] f32;  Bt, Ct: [B, T, N] f32;  A: [Di, N] f32.
+    Returns y [B, T, Di] f32 (without the D-skip term)."""
+    B, T, Di = x.shape
+    N = Bt.shape[-1]
+    blk_d = min(blk_d, Di)
+    while Di % blk_d:
+        blk_d //= 2
+    n_db = Di // blk_d
+
+    # time-major [B, T, blk] slabs; transpose channel blocks into grid
+    kernel = functools.partial(_kernel, T=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_db),
+        in_specs=[
+            pl.BlockSpec((1, T, blk_d), lambda b, db: (b, 0, db)),
+            pl.BlockSpec((1, T, blk_d), lambda b, db: (b, 0, db)),
+            pl.BlockSpec((1, T, N), lambda b, db: (b, 0, 0)),
+            pl.BlockSpec((1, T, N), lambda b, db: (b, 0, 0)),
+            pl.BlockSpec((blk_d, N), lambda b, db: (db, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, blk_d), lambda b, db: (b, 0, db)),
+        out_shape=jax.ShapeDtypeStruct((B, T, Di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((blk_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bt, Ct, A)

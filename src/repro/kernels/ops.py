@@ -1,0 +1,47 @@
+"""Jit'd public wrappers: Pallas kernel on TPU, reference oracle elsewhere.
+
+The model code calls these; on a TPU backend the Pallas kernels run
+compiled, on CPU (this container / unit tests) the pure-jnp oracle runs so
+numerics are identical everywhere.  ``interpret=True`` paths are exercised
+by tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_bhd
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.mamba_scan import mamba1_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None):
+    if _on_tpu():
+        return flash_attention_bhsd(q, k, v, causal=causal, window=window)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def decode_attention(q, k_cache, v_cache, cache_len, positions, *,
+                     window: Optional[int] = None):
+    if _on_tpu():
+        return decode_attention_bhd(q, k_cache, v_cache, cache_len,
+                                    positions, window=window)
+    return ref.decode_attention_ref(q, k_cache, v_cache, cache_len,
+                                    positions, window=window)
+
+
+@jax.jit
+def mamba_scan(x, dt, Bt, Ct, A):
+    if _on_tpu():
+        return mamba1_scan(x, dt, Bt, Ct, A)
+    return ref.mamba1_scan_ref(x, dt, Bt, Ct, A)

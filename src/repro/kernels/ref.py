@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: [BH, S, D]; k, v: [BKV, S, D] -> [BH, S, D]."""
+    BH, S, D = q.shape
+    BKV = k.shape[0]
+    r = BH // BKV
+    kx = jnp.repeat(k, r, axis=0)
+    vx = jnp.repeat(v, r, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / (D ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", a, vx.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, positions, *,
+                         window: Optional[int] = None):
+    """q: [B, H, D]; caches: [B, KV, S, D]; cache_len [B]; positions [B, S]."""
+    B, H, D = q.shape
+    _, KV, S, _ = k_cache.shape
+    r = H // KV
+    qg = q.reshape(B, KV, r, D).astype(jnp.float32)
+    s = jnp.einsum("bgrd,bgsd->bgrs", qg,
+                   k_cache.astype(jnp.float32)) / (D ** 0.5)
+    clen = cache_len[:, None]
+    valid = (positions >= 0) & (positions < clen)
+    if window is not None:
+        valid &= positions > clen - 1 - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bgsd->bgrd", a, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def mamba1_scan_ref(x, dt, Bt, Ct, A):
+    """Sequential oracle for the selective scan (f32 throughout)."""
+    B, T, Di = x.shape
+    N = Bt.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[:, :, None] * A[None])       # [B, Di, N]
+        h = h * da + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bt.swapaxes(0, 1), Ct.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1)

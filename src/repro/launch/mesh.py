@@ -1,0 +1,21 @@
+"""Production mesh builder.
+
+Functions, never module-level constants: importing this module must not
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16, 16) -> ("data", "model").
+    Multi-pod: 2 pods x 256 chips (2, 16, 16) -> ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many real devices exist (CPU tests)."""
+    return jax.make_mesh(shape, axes)

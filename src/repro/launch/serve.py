@@ -1,0 +1,86 @@
+"""Serving driver: the real multi-process engine under a request workload.
+
+  PYTHONPATH=src python -m repro.launch.serve --tp 4 --cores 1 \
+      --requests 24 --rps 8 --attack-tokens 2000
+
+Runs the instrumented control plane (API-server tokenizer pool -> EngineCore
+-> shm broadcast -> workers) on this machine, restricted to ``--cores``
+logical CPUs (the paper's salloc-style budget), and reports TTFT /
+tokenize / dequeue statistics.
+"""
+from __future__ import annotations
+
+import argparse
+import statistics as st
+import time
+
+from repro.core.cpuutil import CpuSampler, cpu_budget
+from repro.core.devmodel import DeviceModel
+from repro.core.engine import EngineConfig, ServingSystem
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--cores", type=int, default=1)
+    ap.add_argument("--pool-width", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rps", type=float, default=8.0)
+    ap.add_argument("--words", type=int, default=400,
+                    help="prompt length in words")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--async-sched", action="store_true")
+    ap.add_argument("--yield-every", type=int, default=64)
+    args = ap.parse_args()
+
+    got = cpu_budget(args.cores)
+    cfg = EngineConfig(
+        tp_degree=args.tp, pool_width=args.pool_width,
+        device=DeviceModel(t_fixed=1e-3, t_prefill_tok=1e-6,
+                           t_decode_seq=2e-5),
+        yield_every=args.yield_every, async_sched=args.async_sched,
+    )
+    print(f"[serve] tp={args.tp} cores={got} pool={args.pool_width} "
+          f"async_sched={args.async_sched}")
+    text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
+
+    sys_ = ServingSystem(cfg).start()
+    with CpuSampler(0.05) as sampler:
+        t0 = time.perf_counter()
+        for i in range(args.requests):
+            target = t0 + i / args.rps
+            now = time.perf_counter()
+            if target > now:
+                time.sleep(target - now)
+            sys_.submit(text, max_new_tokens=args.max_new,
+                        is_victim=(i % 5 == 0))
+        results = sys_.collect(args.requests, timeout=120.0)
+    stats = sys_.shutdown()
+
+    ttfts = sorted(r["t_first_token"] - r["t_arrival"]
+                   for r in results.values())
+    toks = sorted(r["t_tokenize_done"] - r["t_tokenize_start"]
+                  for r in results.values())
+    print(f"[serve] completed {len(results)}/{args.requests}")
+    if ttfts:
+        print(f"[serve] TTFT p50={st.median(ttfts)*1e3:.1f}ms "
+              f"p95={ttfts[int(0.95 * (len(ttfts) - 1))]*1e3:.1f}ms "
+              f"max={ttfts[-1]*1e3:.1f}ms")
+        print(f"[serve] tokenize p50={st.median(toks)*1e3:.2f}ms")
+    for s in stats:
+        if s["role"].startswith("worker"):
+            dq = s["dequeue_wall"]
+            if dq:
+                print(f"[serve] {s['role']} dequeue p50="
+                      f"{st.median(dq)*1e3:.2f}ms max={max(dq)*1e3:.1f}ms "
+                      f"n={len(dq)}")
+    eng = next((s for s in stats if s["role"] == "engine"), None)
+    if eng and eng["sched_cost"]:
+        print(f"[serve] sched p50={st.median(eng['sched_cost'])*1e6:.0f}us "
+              f"steps={len(eng['sched_cost'])} "
+              f"barrier p50={st.median(eng['barrier_wall'])*1e3:.2f}ms")
+    print(f"[serve] cpu saturation(>=95%)={sampler.saturation_seconds():.1f}s")
+
+
+if __name__ == "__main__":
+    main()

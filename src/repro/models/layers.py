@@ -1,0 +1,199 @@
+"""Shared neural-net building blocks (no flax/optax — built from scratch).
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (pytrees);
+  * init functions take a PRNG key and return a param tree — they are
+    traceable by ``jax.eval_shape`` so the dry-run never allocates;
+  * matmul-heavy compute stays in the config dtype (bf16 target), norms,
+    softmax and scan carries accumulate in float32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def linear(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(kind: str, params, x, eps: float = 1e-6):
+    # Reductions accumulate in f32; the elementwise rescale stays in the
+    # input dtype so XLA never materializes a full f32 copy of the residual
+    # stream (saved activations in scanned stacks would double otherwise).
+    def _mean_f32(v):
+        return jnp.mean(v, axis=-1, keepdims=True, dtype=jnp.float32)
+
+    if kind == "rmsnorm":
+        inv = jax.lax.rsqrt(_mean_f32(jnp.square(x)) + eps).astype(x.dtype)
+        return x * inv * params["scale"].astype(x.dtype)
+    if kind == "layernorm":
+        mu = _mean_f32(x)
+        var = _mean_f32(jnp.square(x.astype(jnp.float32) - mu))
+        inv = jax.lax.rsqrt(var + eps)
+        y = ((x.astype(jnp.float32) - mu) * inv).astype(x.dtype)
+        return y * params["scale"].astype(x.dtype) + params["bias"].astype(x.dtype)
+    if kind == "nonparametric_ln":  # OLMo: LN without learnable affine
+        mu = _mean_f32(x)
+        var = _mean_f32(jnp.square(x.astype(jnp.float32) - mu))
+        return ((x.astype(jnp.float32) - mu)
+                * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def norm_init(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return rmsnorm_init(d, dtype)
+    if kind == "layernorm":
+        return layernorm_init(d, dtype)
+    if kind == "nonparametric_ln":
+        return {}  # no params
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)          # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    angles = angles[..., None, :]                          # [..., S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    y2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, theta: float, sections: Tuple[int, int, int]):
+    """Qwen2-VL multimodal rotary: positions_thw [3, B, S], sections sum to
+    head_dim//2; frequency slots are assigned to (t, h, w) position streams."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)           # [half]
+    # per-frequency-slot section id: 0..len(sections)-1
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )                                                      # [half]
+    # pick the position stream per frequency slot
+    pos = positions_thw.astype(jnp.float32)                # [3, B, S]
+    pos_per_slot = pos[sec_id]                             # [half, B, S]
+    angles = jnp.einsum("hbs,h->bsh", pos_per_slot, freqs)  # [B, S, half]
+    angles = angles[..., None, :]                          # [B, S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    y2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoid_embed(positions, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute embedding for (traced) positions
+    [...,] -> [..., d]."""
+    half = d // 2
+    log_timescale = math.log(10_000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1)
+
+
+def sinusoid_positions(n_pos: int, d: int) -> jnp.ndarray:
+    """Static [n_pos, d] sinusoidal table."""
+    return sinusoid_embed(jnp.arange(n_pos), d)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, kind: str, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+            "b_down": jnp.zeros((d_model,), dtype),
+        }
+    raise ValueError(f"unknown mlp {kind!r}")
+
+
+def apply_mlp(kind: str, params, x):
+    if kind == "swiglu":
+        g = linear(x, params["w_gate"])
+        u = linear(x, params["w_up"])
+        return linear(jax.nn.silu(g) * u, params["w_down"])
+    if kind == "geglu":
+        g = linear(x, params["w_gate"])
+        u = linear(x, params["w_up"])
+        return linear(jax.nn.gelu(g, approximate=True) * u, params["w_down"])
+    if kind == "gelu":
+        h = jax.nn.gelu(linear(x, params["w_up"], params["b_up"]), approximate=True)
+        return linear(h, params["w_down"], params["b_down"])
+    raise ValueError(f"unknown mlp {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, targets, vocab_size: int):
+    """Mean CE over tokens; logits may be vocab-padded (targets < vocab_size)."""
+    logits = logits.astype(jnp.float32)
+    # mask vocab padding columns so they never receive probability mass
+    v = logits.shape[-1]
+    if v > vocab_size:
+        pad_mask = jnp.arange(v) >= vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

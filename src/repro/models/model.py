@@ -1,0 +1,894 @@
+"""Unified model stack for all 10 assigned architectures.
+
+A model is a list of *stages*; a stage scans (or unrolls) over ``n_periods``
+identical *periods*; a period is a short static list of layer templates
+(``LayerSpec``).  This factorization keeps the HLO small for deep stacks
+(lax.scan over stacked params) while expressing heterogeneous patterns:
+
+  dense (granite/olmo/qwen2/qwen2-vl):  1 stage, period = [attn]
+  gemma3 (5 local : 1 global):          1 stage, period = [local x5, global]
+  falcon-mamba:                         1 stage, period = [ssm]
+  zamba2 (shared attn every 6):         stage A: 6 periods of
+                                        [shared_attn, ssm x6]; stage B
+                                        (tail, unrolled): [shared_attn, ssm x2]
+  whisper:                              encoder stage [bidir attn] x12 +
+                                        decoder stage [self+cross attn] x12
+  moe archs:                            1 stage, period = [attn(moe mlp)]
+
+Entry points: ``init_params`` / ``param_axes`` / ``loss_fn`` (train),
+``prefill`` and ``decode`` (serving), ``cache_specs`` / ``cache_axes``
+(dry-run cache stand-ins).  All are mesh-aware through
+``repro.dist.sharding``; with no active mesh they degrade to single-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist.sharding import (
+    current as mesh_ctx,
+    shard,
+    spec_for,
+)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    HeadLayout,
+    attn_init,
+    attn_param_axes,
+    decode_attention,
+    flash_attention,
+    head_layout,
+    output_proj,
+    project_kv,
+    project_q,
+)
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    embed_init,
+    mlp_init,
+    norm_init,
+    sinusoid_embed,
+    sinusoid_positions,
+    softmax_cross_entropy,
+)
+
+# ---------------------------------------------------------------------------
+# stack plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                       # attn | ssm | shared_attn | enc_attn | dec_attn
+    window: Optional[int] = None    # sliding-window size (None = full)
+    rope_theta: float = 10_000.0
+    causal: bool = True
+    cross: bool = False             # whisper decoder cross-attention
+    mlp: Optional[str] = None       # None = no MLP (mamba blocks)
+    moe: bool = False
+    use_rope: bool = True           # whisper uses absolute positions instead
+    use_mrope: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str
+    specs: Tuple[LayerSpec, ...]    # layer templates within one period
+    n_periods: int
+    scan: bool = True               # lax.scan over periods (False = unrolled)
+    encoder: bool = False           # whisper encoder (consumes frames)
+
+
+def build_plan(cfg: ModelConfig) -> List[Stage]:
+    if cfg.family == "ssm":
+        spec = LayerSpec(kind="ssm", mlp=None)
+        return [Stage("ssm", (spec,), cfg.n_layers)]
+
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period or 6
+        full, tail = divmod(cfg.n_layers, period)
+        shared = LayerSpec(kind="shared_attn", rope_theta=cfg.rope_theta,
+                           mlp=cfg.mlp)
+        ssm = LayerSpec(kind="ssm", mlp=None)
+        stages = [Stage("hybrid", (shared,) + (ssm,) * period, full)]
+        if tail:
+            stages.append(Stage("hybrid_tail", (shared,) + (ssm,) * tail, 1,
+                                scan=False))
+        return stages
+
+    if cfg.family == "audio" and cfg.encdec is not None:
+        enc = LayerSpec(kind="enc_attn", causal=False, mlp=cfg.mlp,
+                        use_rope=False)
+        dec = LayerSpec(kind="dec_attn", causal=True, cross=True, mlp=cfg.mlp,
+                        use_rope=False)
+        return [
+            Stage("encoder", (enc,), cfg.encdec.n_encoder_layers, encoder=True),
+            Stage("decoder", (dec,), cfg.n_layers),
+        ]
+
+    # decoder-only transformer families (dense / moe / vlm)
+    use_mrope = cfg.mrope_sections is not None
+    if cfg.local_global_ratio is not None:
+        local, glob = cfg.local_global_ratio
+        period = local + glob
+        assert cfg.n_layers % period == 0, (cfg.name, cfg.n_layers, period)
+        specs = tuple(
+            LayerSpec(kind="attn", window=cfg.sliding_window,
+                      rope_theta=10_000.0, mlp=cfg.mlp, moe=cfg.moe is not None)
+            for _ in range(local)
+        ) + tuple(
+            LayerSpec(kind="attn", window=None, rope_theta=cfg.rope_theta,
+                      mlp=cfg.mlp, moe=cfg.moe is not None)
+            for _ in range(glob)
+        )
+        return [Stage("dense_lg", specs, cfg.n_layers // period)]
+
+    spec = LayerSpec(kind="attn", window=cfg.sliding_window,
+                     rope_theta=cfg.rope_theta, mlp=cfg.mlp,
+                     moe=cfg.moe is not None, use_mrope=use_mrope)
+    return [Stage(cfg.family, (spec,), cfg.n_layers)]
+
+
+def _layout(cfg: ModelConfig) -> Optional[HeadLayout]:
+    if cfg.n_heads == 0:
+        return None
+    return head_layout(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       max(mesh_ctx().tp, 1))
+
+
+# ---------------------------------------------------------------------------
+# per-layer init + axes
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, spec: LayerSpec, cfg: ModelConfig, layout):
+    ks = jax.random.split(key, 4)
+    dtype = cfg.param_dtype()
+    p: Dict[str, Any] = {}
+    if spec.kind == "ssm":
+        dims = ssm_mod.ssm_dims(cfg.ssm, cfg.d_model)
+        p["norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["ssm"] = ssm_mod.ssm_init(ks[0], dims, dtype)
+        return p
+    # attention-bearing layer
+    p["norm1"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    p["attn"] = attn_init(ks[0], cfg.d_model, layout, dtype,
+                          bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+    if spec.cross:
+        p["norm_x"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = attn_init(ks[1], cfg.d_model, layout, dtype,
+                               bias=cfg.qkv_bias)
+    if spec.moe:
+        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, max(mesh_ctx().tp, 1))
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["moe"] = moe_mod.moe_init(ks[2], dims, dtype)
+        if cfg.moe.n_shared_experts:
+            p["shared_mlp"] = mlp_init(
+                ks[3], "swiglu", cfg.d_model,
+                cfg.moe.n_shared_experts * cfg.moe.d_ff_expert, dtype)
+            p["shared_gate"] = dense_init(ks[3], cfg.d_model, 1, dtype)
+    elif spec.mlp is not None:
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["mlp"] = mlp_init(ks[2], spec.mlp, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _layer_axes(spec: LayerSpec, cfg: ModelConfig, layout):
+    norm_ax = {} if cfg.norm == "nonparametric_ln" else {
+        k: (None,) for k in ("scale", "bias")[: 1 if cfg.norm == "rmsnorm" else 2]
+    }
+    a: Dict[str, Any] = {}
+    if spec.kind == "ssm":
+        dims = ssm_mod.ssm_dims(cfg.ssm, cfg.d_model)
+        a["norm"] = dict(norm_ax)
+        a["ssm"] = ssm_mod.ssm_param_axes(dims)
+        return a
+    a["norm1"] = dict(norm_ax)
+    a["attn"] = attn_param_axes(layout, bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+    if spec.cross:
+        a["norm_x"] = dict(norm_ax)
+        a["cross"] = attn_param_axes(layout, bias=cfg.qkv_bias)
+    if spec.moe:
+        a["norm2"] = dict(norm_ax)
+        a["moe"] = moe_mod.moe_param_axes()
+        if cfg.moe.n_shared_experts:
+            a["shared_mlp"] = {"w_gate": (None, "tp"), "w_up": (None, "tp"),
+                               "w_down": ("tp", None)}
+            a["shared_gate"] = (None, None)
+    elif spec.mlp is not None:
+        a["norm2"] = dict(norm_ax)
+        a["mlp"] = (
+            {"w_gate": (None, "tp"), "w_up": (None, "tp"), "w_down": ("tp", None)}
+            if spec.mlp in ("swiglu", "geglu") else
+            {"w_up": (None, "tp"), "b_up": ("tp",),
+             "w_down": ("tp", None), "b_down": (None,)}
+        )
+    return a
+
+
+def _stack_axes(tree):
+    """Prepend a replicated period dim to every axes tuple in a tree."""
+    def f(x):
+        if isinstance(x, tuple):
+            return (None,) + x
+        return x
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(key, cfg: ModelConfig):
+    """Full parameter tree (traceable; use jax.eval_shape for the dry-run)."""
+    layout = _layout(cfg)
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 3)
+    dtype = cfg.param_dtype()
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], cfg.padded_vocab, cfg.d_model,
+                                       dtype)
+    if cfg.family == "hybrid":
+        # zamba2 shared attention block: one copy reused by every period
+        shared_spec = LayerSpec(kind="shared_attn", mlp=cfg.mlp)
+        params["shared_block"] = _layer_init(keys[2], shared_spec, cfg, layout)
+
+    stage_keys = jax.random.split(keys[-1], len(plan))
+    for si, stage in enumerate(plan):
+        skeys = jax.random.split(stage_keys[si], stage.n_periods)
+
+        def one_period(k):
+            lk = jax.random.split(k, len(stage.specs))
+            out = {}
+            for li, spec in enumerate(stage.specs):
+                if spec.kind == "shared_attn":
+                    continue  # shared params live at top level
+                out[f"layer{li}"] = _layer_init(lk[li], spec, cfg, layout)
+            return out
+
+        stacked = jax.vmap(one_period)(skeys)
+        params[stage.name] = stacked
+    if cfg.family == "audio" and cfg.encdec is not None:
+        params["enc_norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    """Tree of logical sharding axes matching ``init_params`` exactly."""
+    layout = _layout(cfg)
+    plan = build_plan(cfg)
+    axes: Dict[str, Any] = {
+        "embed": ("tp", None),
+        "final_norm": {} if cfg.norm == "nonparametric_ln" else {
+            k: (None,) for k in
+            ("scale", "bias")[: 1 if cfg.norm == "rmsnorm" else 2]},
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("tp", None)
+    if cfg.family == "hybrid":
+        shared_spec = LayerSpec(kind="shared_attn", mlp=cfg.mlp)
+        axes["shared_block"] = _layer_axes(shared_spec, cfg, layout)
+    for stage in plan:
+        st = {}
+        for li, spec in enumerate(stage.specs):
+            if spec.kind == "shared_attn":
+                continue
+            st[f"layer{li}"] = _stack_axes(_layer_axes(spec, cfg, layout))
+        axes[stage.name] = st
+    if cfg.family == "audio" and cfg.encdec is not None:
+        axes["enc_norm"] = dict(axes["final_norm"])
+    return axes
+
+
+def param_shardings(cfg: ModelConfig, params_shape):
+    """NamedShardings for every param leaf (for jit in_shardings)."""
+    axes = param_axes(cfg)
+    ctx = mesh_ctx()
+
+    def to_sharding(ax, leaf):
+        if not ctx.active:
+            return None
+        ax = ax if isinstance(ax, tuple) else ()
+        ax = ax + (None,) * (len(leaf.shape) - len(ax))
+        return jax.sharding.NamedSharding(
+            ctx.mesh, spec_for(leaf.shape, *ax))
+
+    return jax.tree.map(to_sharding, axes, params_shape,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits (Megatron-style vocab sharding)
+# ---------------------------------------------------------------------------
+
+
+def embed_lookup(table, tokens):
+    """Vocab-sharded gather: local masked gather + psum over 'model'."""
+    ctx = mesh_ctx()
+    if not ctx.active or ctx.tp == 1:
+        return jnp.take(table, tokens, axis=0)
+    tp_ax = "model"
+
+    def body(tbl, tok):
+        v_loc = tbl.shape[0]
+        rank = jax.lax.axis_index(tp_ax)
+        lo = rank * v_loc
+        idx = tok - lo
+        ok = (idx >= 0) & (idx < v_loc)
+        y = jnp.take(tbl, jnp.clip(idx, 0, v_loc - 1), axis=0)
+        y = jnp.where(ok[..., None], y, 0)
+        return jax.lax.psum(y, tp_ax)
+
+    dp_ok = tokens.shape[0] % ctx.dp == 0
+    bspec = ctx.dp_axes if dp_ok else None
+    fn = jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(P(tp_ax, None), P(bspec, None)),
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )
+    return fn(table, tokens)
+
+
+def lm_logits(x, table):
+    """x: [B,S,d]; table: [Vp, d] sharded on vocab -> logits sharded on vocab."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return shard(logits, "dp", None, "tp")
+
+
+def chunked_ce(x, table, targets, vocab_size: int, n_chunks: int = 8,
+               unroll: bool = False):
+    """Cross-entropy without materializing full [B,S,Vp] logits.
+
+    Splits the sequence into ``n_chunks`` scanned chunks; each chunk computes
+    its logits, CE partial sum, and is rematerialized in the backward pass
+    (jax.checkpoint), so peak logits memory is 1/n_chunks of the dense loss.
+    """
+    B, S, _ = x.shape
+    while S % n_chunks != 0:
+        n_chunks //= 2
+    n_chunks = max(n_chunks, 1)
+    T = S // n_chunks
+    xs = x.reshape(B, n_chunks, T, -1).swapaxes(0, 1)          # [C,B,T,d]
+    ts = targets.reshape(B, n_chunks, T).swapaxes(0, 1)        # [C,B,T]
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, tc = inp
+        logits = lm_logits(xc, table)
+        logits = logits.astype(jnp.float32)
+        v = logits.shape[-1]
+        if v > vocab_size:
+            pad = jnp.arange(v) >= vocab_size
+            logits = jnp.where(pad, -1e30, logits)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ts),
+                            unroll=n_chunks if unroll else 1)
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _positions_for(spec: LayerSpec, extras, start, length, batch):
+    if spec.use_mrope:
+        return extras["mrope_positions"]              # [3, B, S]
+    pos = start + jnp.arange(length)
+    return jnp.broadcast_to(pos, (batch, length))
+
+
+def _apply_qk_rope(spec: LayerSpec, q, k, positions, cfg: ModelConfig):
+    if not spec.use_rope:
+        return q, k
+    if spec.use_mrope:
+        q = apply_mrope(q, positions, spec.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, spec.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    return q, k
+
+
+def _attn_layer_full(p, x, spec: LayerSpec, cfg: ModelConfig, layout,
+                     extras, *, want_cache: bool, enc_out=None,
+                     cross_kv=None):
+    """Full-sequence (train/prefill) attention layer.  Returns
+    (y, cache_entry | None).  cache_entry = {k, v} sized to the *cache slot*
+    (ring-trimmed for window layers)."""
+    B, S, _ = x.shape
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    q = project_q(p["attn"], h, layout, qk_norm=cfg.qk_norm)
+    k, v = project_kv(p["attn"], h, layout, qk_norm=cfg.qk_norm)
+    pos = _positions_for(spec, extras, 0, S, B)
+    q, k = _apply_qk_rope(spec, q, k, pos, cfg)
+    o = flash_attention(q, k, v, layout, causal=spec.causal,
+                        window=spec.window)
+    x = x + output_proj(p["attn"], o, layout)
+
+    if spec.cross:
+        hx = apply_norm(cfg.norm, p["norm_x"], x)
+        qx = project_q(p["cross"], hx, layout)
+        if cross_kv is None:
+            kx, vx = project_kv(p["cross"], enc_out, layout)
+            cross_kv = {"k": kx, "v": vx}
+        o = attn_mod.cross_attention(qx, cross_kv["k"], cross_kv["v"], layout)
+        x = x + output_proj(p["cross"], o, layout)
+
+    aux = jnp.zeros((), jnp.float32)
+    if spec.moe:
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, max(mesh_ctx().tp, 1))
+        y, aux = moe_mod.moe_apply(p["moe"], h2, dims)
+        if "shared_mlp" in p:
+            g = jax.nn.sigmoid(
+                jnp.einsum("bsd,do->bso", h2, p["shared_gate"]).astype(jnp.float32))
+            y = y + (g * apply_mlp("swiglu", p["shared_mlp"], h2
+                                   ).astype(jnp.float32)).astype(y.dtype)
+        x = x + y
+    elif spec.mlp is not None:
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        x = x + apply_mlp(spec.mlp, p["mlp"], h2)
+    x = shard(x, "dp", "sp", None)
+
+    cache_entry = None
+    if want_cache:
+        if spec.window is not None and S > spec.window:
+            w = spec.window
+            # ring layout: slot j holds the last-written token with pos%w==j
+            tail = k[:, -w:], v[:, -w:]
+            shift = S % w
+            kk = jnp.roll(tail[0], shift, axis=1)
+            vv = jnp.roll(tail[1], shift, axis=1)
+            cache_entry = {"k": kk, "v": vv}
+        else:
+            cache_entry = {"k": k, "v": v}
+        if spec.cross:
+            cache_entry["xk"] = cross_kv["k"]
+            cache_entry["xv"] = cross_kv["v"]
+    return x, cache_entry, aux
+
+
+def _attn_layer_decode(p, x, spec: LayerSpec, cfg: ModelConfig, layout,
+                       extras, cache_entry, cache_len):
+    """Single-token decode step against a cache entry.  Returns (y, new_entry).
+
+    Full layers: entry k/v [B, Sc, KVs, Dh]; write slot = cache_len.
+    Window layers: ring entry [B, W, KVs, Dh]; write slot = cache_len % W.
+    """
+    B = x.shape[0]
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    q = project_q(p["attn"], h, layout, qk_norm=cfg.qk_norm)
+    k, v = project_kv(p["attn"], h, layout, qk_norm=cfg.qk_norm)
+    pos = (extras["mrope_positions"] if spec.use_mrope
+           else jnp.broadcast_to(cache_len, (B, 1)))
+    q, k = _apply_qk_rope(spec, q, k, pos, cfg)
+
+    kc, vc = cache_entry["k"], cache_entry["v"]
+    Sc = kc.shape[1]
+    if spec.window is not None and Sc <= spec.window:
+        slot = jnp.mod(cache_len, Sc)
+        w = spec.window
+        j = jnp.arange(Sc)
+        # slot j holds absolute position clen - ((clen - j) mod Sc) for the
+        # *post-write* cache (new token at ``slot`` has position clen).
+        positions = cache_len - jnp.mod(cache_len - j, Sc)
+        window = w
+    else:
+        slot = cache_len
+        positions = jnp.arange(Sc)
+        window = spec.window
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+    o = decode_attention(q, kc, vc, cache_len + 1, layout, window=window,
+                         cache_positions=positions)
+    x = x + output_proj(p["attn"], o, layout)
+
+    if spec.cross:
+        hx = apply_norm(cfg.norm, p["norm_x"], x)
+        qx = project_q(p["cross"], hx, layout)
+        o = decode_attention(qx, cache_entry["xk"], cache_entry["xv"],
+                             cache_entry["xk"].shape[1], layout)
+        x = x + output_proj(p["cross"], o, layout)
+
+    aux = jnp.zeros((), jnp.float32)
+    if spec.moe:
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, max(mesh_ctx().tp, 1))
+        y, aux = moe_mod.moe_apply(p["moe"], h2, dims)
+        if "shared_mlp" in p:
+            g = jax.nn.sigmoid(
+                jnp.einsum("bsd,do->bso", h2, p["shared_gate"]).astype(jnp.float32))
+            y = y + (g * apply_mlp("swiglu", p["shared_mlp"], h2
+                                   ).astype(jnp.float32)).astype(y.dtype)
+        x = x + y
+    elif spec.mlp is not None:
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        x = x + apply_mlp(spec.mlp, p["mlp"], h2)
+
+    new_entry = dict(cache_entry)
+    new_entry["k"], new_entry["v"] = kc, vc
+    return x, new_entry, aux
+
+
+def _ssm_layer(p, x, cfg: ModelConfig, state):
+    dims = ssm_mod.ssm_dims(cfg.ssm, cfg.d_model)
+    h = apply_norm(cfg.norm, p["norm"], x)
+    y, new_state = ssm_mod.mamba_block(p["ssm"], h, dims, state)
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# stage execution
+# ---------------------------------------------------------------------------
+
+
+def _period_params(stage: Stage, stage_params, shared_block):
+    """Resolve per-template params for one period slice (already sliced)."""
+    def get(li, spec):
+        if spec.kind == "shared_attn":
+            return shared_block
+        return stage_params[f"layer{li}"]
+    return get
+
+
+def _run_stage_full(stage: Stage, stage_params, shared_block, x, cfg, layout,
+                    extras, *, want_cache: bool, enc_out=None,
+                    unroll: bool = False, remat: bool = False):
+    """Train/prefill execution of one stage.  Returns (x, stage_cache, aux)."""
+
+    def period_body(x, period_p):
+        get = _period_params(stage, period_p, shared_block)
+        caches = {}
+        aux = jnp.zeros((), jnp.float32)
+        for li, spec in enumerate(stage.specs):
+            p = get(li, spec)
+            if spec.kind == "ssm":
+                x, st = _ssm_layer(p, x, cfg, None)
+                if want_cache:
+                    caches[f"layer{li}"] = st
+            else:
+                shared_spec = dataclasses.replace(
+                    spec, kind="attn") if spec.kind == "shared_attn" else spec
+                x, ce, a = _attn_layer_full(
+                    p, x, shared_spec, cfg, layout, extras,
+                    want_cache=want_cache, enc_out=enc_out)
+                aux = aux + a
+                if ce is not None:
+                    caches[f"layer{li}"] = ce
+        return x, (caches, aux)
+
+    body = period_body
+    if remat:
+        # full per-period rematerialization: only the period boundary
+        # activations are saved; everything inside is recomputed in the
+        # backward pass (MaxText-style "minimal" policy).
+        body = jax.checkpoint(period_body)
+
+    if stage.scan and stage.n_periods > 1:
+        x, (cache, auxs) = jax.lax.scan(body, x, stage_params,
+                                        unroll=stage.n_periods if unroll else 1)
+        aux = jnp.sum(auxs)
+    else:
+        # single period (or explicitly unrolled tail stage)
+        caches, auxs = [], []
+        for pi in range(stage.n_periods):
+            sl = jax.tree.map(lambda a: a[pi], stage_params)
+            x, (c, a) = body(x, sl)
+            caches.append(c)
+            auxs.append(a)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        aux = jnp.sum(jnp.stack(auxs))
+    return x, cache, aux
+
+
+def _run_stage_decode(stage: Stage, stage_params, shared_block, x, cfg, layout,
+                      extras, stage_cache, cache_len, unroll: bool = False):
+    """Decode execution; consumes + rebuilds the stage cache."""
+
+    def period_body(x, inputs):
+        period_p, period_cache = inputs
+        get = _period_params(stage, period_p, shared_block)
+        new_cache = {}
+        aux = jnp.zeros((), jnp.float32)
+        for li, spec in enumerate(stage.specs):
+            p = get(li, spec)
+            key = f"layer{li}"
+            if spec.kind == "ssm":
+                x, st = _ssm_layer(p, x, cfg, period_cache[key])
+                new_cache[key] = st
+            elif spec.kind == "shared_attn":
+                # shared block holds no per-layer cache at decode: recompute
+                # with a 1-token "prefill" over its own query only would drop
+                # history; instead the shared block DOES cache (per period).
+                shared_spec = dataclasses.replace(spec, kind="attn")
+                x, ce, a = _attn_layer_decode(
+                    p, x, shared_spec, cfg, layout, extras,
+                    period_cache[key], cache_len)
+                new_cache[key] = ce
+                aux = aux + a
+            else:
+                x, ce, a = _attn_layer_decode(
+                    p, x, spec, cfg, layout, extras, period_cache[key],
+                    cache_len)
+                new_cache[key] = ce
+                aux = aux + a
+        return x, (new_cache, aux)
+
+    if stage.scan and stage.n_periods > 1:
+        x, (cache, auxs) = jax.lax.scan(
+            period_body, x, (stage_params, stage_cache),
+            unroll=stage.n_periods if unroll else 1)
+        aux = jnp.sum(auxs)
+    else:
+        caches, auxs = [], []
+        for pi in range(stage.n_periods):
+            slp = jax.tree.map(lambda a: a[pi], stage_params)
+            slc = jax.tree.map(lambda a: a[pi], stage_cache)
+            x, (c, a) = period_body(x, (slp, slc))
+            caches.append(c)
+            auxs.append(a)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        aux = jnp.sum(jnp.stack(auxs))
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg: ModelConfig, frames, layout, unroll=False,
+            remat=False):
+    """frames: [B, Tenc, d] (stubbed conv frontend) -> encoder hidden."""
+    Tenc = frames.shape[1]
+    pos = sinusoid_positions(Tenc, cfg.d_model).astype(frames.dtype)
+    x = frames + pos[None]
+    x = shard(x, "dp", "sp", None)
+    stage = build_plan(cfg)[0]
+    x, _, _ = _run_stage_full(stage, params[stage.name], None, x, cfg, layout,
+                              {}, want_cache=False, unroll=unroll, remat=remat)
+    return apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, start=0):
+    x = embed_lookup(params["embed"], tokens)
+    if cfg.family == "audio":
+        # whisper decoder: learned/absolute positions (approximated
+        # sinusoidal); ``start`` may be a traced scalar at decode.
+        pos = start + jnp.arange(tokens.shape[1])
+        x = x + sinusoid_embed(pos, cfg.d_model).astype(x.dtype)[None]
+    return shard(x, "dp", "sp", None)
+
+
+def _decoder_stages(cfg: ModelConfig) -> List[Stage]:
+    return [s for s in build_plan(cfg) if not s.encoder]
+
+
+def backbone(params, cfg: ModelConfig, tokens, extras=None, *,
+             want_cache: bool = False, unroll: bool = False,
+             remat: bool = False):
+    """Shared trunk: embeddings -> stages -> final norm.
+
+    Returns (hidden [B,S,d], cache|None, aux).  ``extras`` carries modality
+    inputs: {"frames": ...} (whisper), {"mrope_positions": ...} (qwen2-vl).
+    """
+    extras = extras or {}
+    layout = _layout(cfg)
+    enc_out = None
+    if cfg.family == "audio" and "frames" in extras:
+        enc_out = _encode(params, cfg, extras["frames"], layout,
+                          unroll=unroll, remat=remat)
+
+    x = _embed_tokens(params, cfg, tokens)
+    cache: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    shared = params.get("shared_block")
+    for stage in _decoder_stages(cfg):
+        x, sc, a = _run_stage_full(
+            stage, params[stage.name], shared, x, cfg, layout, extras,
+            want_cache=want_cache, enc_out=enc_out, unroll=unroll, remat=remat)
+        aux = aux + a
+        if want_cache:
+            cache[stage.name] = sc
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x, (cache if want_cache else None), aux
+
+
+def unembed_table(params, cfg: ModelConfig):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, cfg: ModelConfig, tokens, extras=None, *,
+            want_cache: bool = False, unroll: bool = False,
+            remat: bool = False):
+    """Full forward returning dense logits [B,S,Vp] (small-S paths only —
+    training loss uses ``loss_fn``'s chunked CE instead)."""
+    x, cache, aux = backbone(params, cfg, tokens, extras,
+                             want_cache=want_cache, unroll=unroll, remat=remat)
+    return lm_logits(x, unembed_table(params, cfg)), cache, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, unroll: bool = False,
+            remat: bool = False, aux_weight: float = 0.01,
+            ce_chunks: int = 8):
+    extras = {k: v for k, v in batch.items() if k not in ("tokens", "targets")}
+    x, _, aux = backbone(params, cfg, batch["tokens"], extras,
+                         unroll=unroll, remat=remat)
+    ce = chunked_ce(x, unembed_table(params, cfg), batch["targets"],
+                    cfg.vocab_size, n_chunks=ce_chunks, unroll=unroll)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, tokens, extras=None, *,
+            unroll: bool = False):
+    """Prefill: returns (last-token logits [B,1,Vp], cache).  Logits are
+    computed for the final position only — never the [B,S,Vp] tensor."""
+    x, cache, _ = backbone(params, cfg, tokens, extras, want_cache=True,
+                           unroll=unroll)
+    logits = lm_logits(x[:, -1:], unembed_table(params, cfg))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, cache_len,
+                extras=None, *, unroll: bool = False):
+    """One decode step: tokens [B,1] against a cache with ``cache_len`` valid
+    entries.  Returns (logits [B,1,Vp], new_cache)."""
+    extras = extras or {}
+    layout = _layout(cfg)
+    x = _embed_tokens(params, cfg, tokens, start=cache_len)
+    shared = params.get("shared_block")
+    new_cache = {}
+    for stage in _decoder_stages(cfg):
+        x, sc, _ = _run_stage_decode(
+            stage, params[stage.name], shared, x, cfg, layout, extras,
+            cache[stage.name], cache_len, unroll=unroll)
+        new_cache[stage.name] = sc
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return lm_logits(x, table), new_cache
+
+
+def decode_multi(params, cfg: ModelConfig, tokens, cache, cache_len,
+                 n_steps: int, extras=None, *, eos_id: Optional[int] = None,
+                 unroll: bool = False):
+    """Fused multi-step greedy decode: ``n_steps`` tokens per host dispatch.
+
+    The TPU-native analogue of the persistent-kernel / device-side-queue
+    mitigation the paper proposes (§V-B takeaway): the scheduling decision
+    is hoisted out of the per-token loop, so the CPU control plane
+    (broadcast + dispatch + barrier) runs once per ``n_steps`` tokens
+    instead of per token.  Dynamic per-token control (greedy sampling, EOS
+    masking) stays ON DEVICE via lax.scan — exactly the part CUDA Graphs
+    cannot capture (§II-A③).
+
+    Returns (generated [B, n_steps] i32, new_cache, new_cache_len).
+    Sequences that hit ``eos_id`` emit eos thereafter (cache writes continue
+    harmlessly; the engine accounts lengths).
+    """
+    extras = extras or {}
+    B = tokens.shape[0]
+
+    def body(carry, _):
+        tok, cache, clen, done = carry
+        logits, cache = decode_step(params, cfg, tok, cache, clen, extras,
+                                    unroll=unroll)
+        nxt = jnp.argmax(
+            logits[:, 0, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        if eos_id is not None:
+            nxt = jnp.where(done, jnp.int32(eos_id), nxt)
+            done = done | (nxt == eos_id)
+        return (nxt[:, None], cache, clen + 1, done), nxt
+
+    done0 = jnp.zeros((B,), bool)
+    (tok, cache, clen, _), toks = jax.lax.scan(
+        body, (tokens, cache, cache_len, done0), None, length=n_steps)
+    return toks.swapaxes(0, 1), cache, clen
+
+
+# ---------------------------------------------------------------------------
+# cache specs (dry-run stand-ins) + sharding axes
+# ---------------------------------------------------------------------------
+
+
+def _entry_specs(spec: LayerSpec, cfg: ModelConfig, layout, batch: int,
+                 seq: int):
+    dtype = cfg.param_dtype()
+    if spec.kind == "ssm":
+        dims = ssm_mod.ssm_dims(cfg.ssm, cfg.d_model)
+        return ssm_mod.ssm_state_specs(dims, batch, dtype)
+    sc = min(seq, spec.window) if spec.window is not None else seq
+    e = {
+        "k": jax.ShapeDtypeStruct((batch, sc, layout.kv_store, layout.d_head),
+                                  dtype),
+        "v": jax.ShapeDtypeStruct((batch, sc, layout.kv_store, layout.d_head),
+                                  dtype),
+    }
+    if spec.cross:
+        tenc = cfg.encdec.n_encoder_ctx
+        e["xk"] = jax.ShapeDtypeStruct(
+            (batch, tenc, layout.kv_store, layout.d_head), dtype)
+        e["xv"] = jax.ShapeDtypeStruct(
+            (batch, tenc, layout.kv_store, layout.d_head), dtype)
+    return e
+
+
+def _entry_axes(spec: LayerSpec, cfg: ModelConfig, layout):
+    if spec.kind == "ssm":
+        dims = ssm_mod.ssm_dims(cfg.ssm, cfg.d_model)
+        if dims.version == 1:
+            return {"conv": ("dp", None, "tp"), "ssm": ("dp", "tp", None)}
+        return {"conv": ("dp", None, "tp"), "ssm": ("dp", "tp", None, None)}
+    tp = max(mesh_ctx().tp, 1)
+    kv_ax = "tp" if layout is not None and layout.kv_store % tp == 0 else None
+    seq_ax = None if kv_ax == "tp" else "tp"   # seq-shard when heads can't
+    e = {"k": ("dp", seq_ax, kv_ax, None), "v": ("dp", seq_ax, kv_ax, None)}
+    if spec.cross:
+        e["xk"] = ("dp", None, kv_ax, None)
+        e["xv"] = ("dp", None, kv_ax, None)
+    return e
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    """ShapeDtypeStruct cache tree matching prefill/decode cache layout."""
+    layout = _layout(cfg)
+    out = {}
+    for stage in _decoder_stages(cfg):
+        st = {}
+        for li, spec in enumerate(stage.specs):
+            e = _entry_specs(spec, cfg, layout, batch, seq)
+            st[f"layer{li}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((stage.n_periods,) + s.shape,
+                                               s.dtype), e)
+        out[stage.name] = st
+    return out
+
+
+def cache_axes(cfg: ModelConfig):
+    layout = _layout(cfg)
+    out = {}
+    for stage in _decoder_stages(cfg):
+        st = {}
+        for li, spec in enumerate(stage.specs):
+            ax = _entry_axes(spec, cfg, layout)
+            st[f"layer{li}"] = jax.tree.map(
+                lambda a: (None,) + a,
+                ax, is_leaf=lambda x: isinstance(x, tuple))
+        out[stage.name] = st
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, specs):
+    ctx = mesh_ctx()
+    axes = cache_axes(cfg)
+
+    def to_sharding(ax, leaf):
+        if not ctx.active:
+            return None
+        ax = ax + (None,) * (len(leaf.shape) - len(ax))
+        return jax.sharding.NamedSharding(ctx.mesh, spec_for(leaf.shape, *ax))
+
+    return jax.tree.map(to_sharding, axes, specs,
+                        is_leaf=lambda x: isinstance(x, tuple))

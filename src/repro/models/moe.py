@@ -1,0 +1,228 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Dispatch is *gather-based* (argsort -> capacity buckets -> batched GEMM ->
+scatter-add), never one-hot-einsum, so the compiled HLO carries the true
+active-expert FLOPs (E_loc x C x d x ff) — required for an honest roofline.
+
+Three execution paths share `_route_and_bucket` / `_expert_ffn`:
+  * local       — no mesh (CPU smoke tests) or tp == 1;
+  * a2a         — shard_map over (dp-axes, "model"): tokens sequence-sharded,
+                  capacity buckets exchanged with all_to_all over "model"
+                  (expert-parallel), experts sharded on "model";
+  * replicated  — decode / short-seq path: tokens replicated over "model",
+                  every model-rank computes only its local experts and the
+                  partial outputs are psum'ed.
+
+Experts are zero-padded to a multiple of the EP axis (40->48, 60->64);
+router logits of padding experts are masked to -inf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.dist.sharding import current as mesh_ctx, pad_to_multiple
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    e_pad: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    capacity_factor: float
+
+
+def moe_dims(cfg: MoEConfig, d_model: int, ep: int) -> MoEDims:
+    return MoEDims(
+        n_experts=cfg.n_experts,
+        e_pad=pad_to_multiple(cfg.n_experts, max(ep, 1)),
+        top_k=cfg.top_k,
+        d_model=d_model,
+        d_ff=cfg.d_ff_expert,
+        capacity_factor=cfg.capacity_factor,
+    )
+
+
+def moe_init(key, dims: MoEDims, dtype):
+    ks = jax.random.split(key, 4)
+    E, d, f = dims.e_pad, dims.d_model, dims.d_ff
+    init = functools.partial(jax.random.normal, dtype=jnp.float32)
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(f)
+    return {
+        "router": dense_init(ks[0], d, E, jnp.float32),  # router kept fp32
+        "w_gate": (init(ks[1], (E, d, f)) * scale_in).astype(dtype),
+        "w_up": (init(ks[2], (E, d, f)) * scale_in).astype(dtype),
+        "w_down": (init(ks[3], (E, f, d)) * scale_out).astype(dtype),
+    }
+
+
+def moe_param_axes():
+    return {
+        "router": (None, None),
+        "w_gate": ("tp", None, None),
+        "w_up": ("tp", None, None),
+        "w_down": ("tp", None, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# routing + capacity buckets (pure local computation)
+# ---------------------------------------------------------------------------
+
+
+def _route(router_w, x, dims: MoEDims):
+    """x: [N, d] -> (gates [N,k] f32, expert_idx [N,k] i32, aux_loss scalar)."""
+    logits = x.astype(jnp.float32) @ router_w                  # [N, E_pad]
+    pad_mask = jnp.arange(dims.e_pad) >= dims.n_experts
+    logits = jnp.where(pad_mask, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, dims.top_k)              # [N, k]
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux loss over real experts
+    me = jnp.mean(probs[:, : dims.n_experts], axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(idx, dims.e_pad).sum(1)[:, : dims.n_experts]), axis=0
+    ) / dims.top_k
+    aux = dims.n_experts * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _capacity(n_tokens: int, dims: MoEDims) -> int:
+    c = int(n_tokens * dims.top_k * dims.capacity_factor / dims.e_pad) + 1
+    return max(4, pad_to_multiple(c, 4))
+
+
+def _bucket(x, gates, idx, capacity: int, dims: MoEDims):
+    """Build capacity buckets.
+
+    Returns xe [E_pad, C, d], ge [E_pad, C] f32, tok [E_pad, C] i32 (sentinel
+    N for dropped/empty slots).
+    """
+    N = x.shape[0]
+    E, k, C = dims.e_pad, dims.top_k, capacity
+    flat_e = idx.reshape(-1)                                   # [N*k]
+    order = jnp.argsort(flat_e)                                # stable
+    tok_sorted = (jnp.arange(N * k) // k)[order]
+    e_sorted = flat_e[order]
+    g_sorted = gates.reshape(-1)[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(N * k) - starts[e_sorted]
+    keep = pos < C
+    dst_e = jnp.where(keep, e_sorted, E)                       # overflow row
+    dst_p = jnp.where(keep, pos, 0)
+    tok = jnp.full((E + 1, C), N, jnp.int32).at[dst_e, dst_p].set(
+        jnp.where(keep, tok_sorted, N))[:E]
+    ge = jnp.zeros((E + 1, C), jnp.float32).at[dst_e, dst_p].set(
+        jnp.where(keep, g_sorted, 0.0))[:E]
+    x_pad = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
+    xe = x_pad[tok]                                            # [E, C, d]
+    return xe, ge, tok
+
+
+def _expert_ffn(w_gate, w_up, w_down, xe):
+    """xe: [E_loc, C', d] -> [E_loc, C', d] (swiglu experts)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down)
+
+
+def _combine(y_e, ge, tok, n_tokens: int, d: int):
+    """Scatter-add expert outputs back to token order."""
+    y = jnp.zeros((n_tokens + 1, d), y_e.dtype)
+    y = y.at[tok.reshape(-1)].add(
+        (y_e * ge[..., None].astype(y_e.dtype)).reshape(-1, d))
+    return y[:n_tokens]
+
+
+# ---------------------------------------------------------------------------
+# execution paths
+# ---------------------------------------------------------------------------
+
+
+def _moe_local(params, x, dims: MoEDims):
+    N, d = x.shape
+    gates, idx, aux = _route(params["router"], x, dims)
+    C = _capacity(N, dims)
+    xe, ge, tok = _bucket(x, gates, idx, C, dims)
+    y_e = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], xe)
+    return _combine(y_e, ge, tok, N, d), aux
+
+
+def _moe_a2a_body(router, w_gate, w_up, w_down, x, dims: MoEDims, axis_names=()):
+    """Runs per-shard inside shard_map; x: [b_loc, s_loc, d]."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gates, idx, aux = _route(router, xt, dims)
+    C = _capacity(b * s, dims)
+    xe, ge, tok = _bucket(xt, gates, idx, C, dims)             # [E_pad, C, d]
+    # expert-parallel exchange: E_pad -> E_loc rows, tp*C columns
+    xe = jax.lax.all_to_all(xe, "model", split_axis=0, concat_axis=1, tiled=True)
+    y_e = _expert_ffn(w_gate, w_up, w_down, xe)                # [E_loc, tp*C, d]
+    y_e = jax.lax.all_to_all(y_e, "model", split_axis=1, concat_axis=0, tiled=True)
+    y = _combine(y_e, ge, tok, b * s, d)
+    aux = jax.lax.pmean(aux, axis_names)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_replicated_body(router, w_gate, w_up, w_down, x, dims: MoEDims,
+                         axis_names=()):
+    """Tokens replicated over 'model'; each rank computes its local experts."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gates, idx, aux = _route(router, xt, dims)
+    C = _capacity(b * s, dims)
+    xe, ge, tok = _bucket(xt, gates, idx, C, dims)             # [E_pad, C, d]
+    rank = jax.lax.axis_index("model")
+    e_loc = w_gate.shape[0]                                    # sharded in
+    xe_loc = jax.lax.dynamic_slice_in_dim(xe, rank * e_loc, e_loc, axis=0)
+    ge_loc = jax.lax.dynamic_slice_in_dim(ge, rank * e_loc, e_loc, axis=0)
+    tok_loc = jax.lax.dynamic_slice_in_dim(tok, rank * e_loc, e_loc, axis=0)
+    y_e = _expert_ffn(w_gate, w_up, w_down, xe_loc)
+    y = _combine(y_e, ge_loc, tok_loc, b * s, d)
+    y = jax.lax.psum(y, "model")
+    aux = jax.lax.pmean(aux, axis_names)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply(params, x, dims: MoEDims) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (y [B, S, d], aux loss scalar)."""
+    ctx = mesh_ctx()
+    B, S, d = x.shape
+    if not ctx.active or ctx.tp == 1:
+        y, aux = _moe_local(params, x.reshape(B * S, d), dims)
+        return y.reshape(B, S, d), aux
+
+    mesh = ctx.mesh
+    dp_axes = ctx.dp_axes
+    tp_ax = "model"
+    dp = ctx.dp
+    batch_shardable = B % dp == 0
+    seq_shardable = S % ctx.tp == 0 and S >= ctx.tp
+    bspec = dp_axes if batch_shardable else None
+
+    router_spec = P(None, None)
+    w_spec = P(tp_ax, None, None)
+    body = _moe_a2a_body if seq_shardable else _moe_replicated_body
+    xspec = P(bspec, tp_ax if seq_shardable else None, None)
+
+    fn = jax.shard_map(
+        functools.partial(body, dims=dims, axis_names=tuple(mesh.axis_names)),
+        mesh=mesh,
+        in_specs=(router_spec, w_spec, w_spec, w_spec, xspec),
+        out_specs=(xspec, P()),
+        check_vma=False,
+    )
+    y, aux = fn(params["router"], params["w_gate"], params["w_up"],
+                params["w_down"], x)
+    return y, aux

@@ -1,0 +1,300 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 / SSD (zamba2).
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel becomes a
+*chunked* formulation — parallel (associative-scan / matmul) within a chunk,
+sequential carry across a small python-unrolled chunk loop — sized so the
+working set fits VMEM-scale blocks and the MXU sees matmuls (SSD path).
+``d_inner`` (mamba-1) / heads (mamba-2) shard over the "model" axis; the
+time recurrence never crosses shards, so the scan needs no collectives.
+
+Decode is the O(1) recurrence step on carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.dist.sharding import shard
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    version: int
+    d_model: int
+    d_inner: int
+    d_state: int
+    d_conv: int
+    dt_rank: int          # mamba-1
+    n_heads: int          # mamba-2
+    head_dim: int         # mamba-2
+    chunk: int
+
+
+def ssm_dims(cfg: SSMConfig, d_model: int) -> SSMDims:
+    d_inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or -(-d_model // 16)
+    return SSMDims(
+        version=cfg.version,
+        d_model=d_model,
+        d_inner=d_inner,
+        d_state=cfg.d_state,
+        d_conv=cfg.d_conv,
+        dt_rank=dt_rank,
+        n_heads=d_inner // cfg.head_dim,
+        head_dim=cfg.head_dim,
+        chunk=cfg.chunk,
+    )
+
+
+def _n_chunks(S: int, dims: SSMDims) -> int:
+    """Python-unrolled chunk count: few, large chunks (exact FLOP accounting
+    without lax.scan's cost-analysis undercount; see DESIGN.md)."""
+    for n in (8, 4, 2, 1):
+        if S % n == 0 and S // n >= 1:
+            return n
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def ssm_init(key, dims: SSMDims, dtype):
+    ks = jax.random.split(key, 8)
+    d, di, n = dims.d_model, dims.d_inner, dims.d_state
+    p = {
+        "w_in": dense_init(ks[0], d, 2 * di, dtype),            # x and z gates
+        "conv_w": (jax.random.normal(ks[1], (dims.d_conv, di), jnp.float32)
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_out": dense_init(ks[2], di, d, dtype),
+        "D": jnp.ones((di,) if dims.version == 1 else (dims.n_heads,), jnp.float32),
+    }
+    if dims.version == 1:
+        p.update({
+            "w_x": dense_init(ks[3], di, dims.dt_rank + 2 * n, dtype),
+            "w_dt": dense_init(ks[4], dims.dt_rank, di, dtype),
+            "dt_bias": jnp.zeros((di,), jnp.float32),
+            # S4D-real init: A_log[d, n], A = -exp(A_log)
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        })
+    else:  # mamba-2 / SSD
+        nh = dims.n_heads
+        p.update({
+            "w_bc": dense_init(ks[3], d, 2 * n, dtype),          # B, C (1 group)
+            "w_dt_head": dense_init(ks[4], d, nh, dtype),
+            "dt_bias": jnp.zeros((nh,), jnp.float32),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        })
+    return p
+
+
+def ssm_param_axes(dims: SSMDims):
+    a = {
+        "w_in": (None, "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "w_out": ("tp", None),
+        "D": ("tp",),
+        "dt_bias": ("tp",),
+        "A_log": ("tp", None) if dims.version == 1 else ("tp",),
+    }
+    if dims.version == 1:
+        a.update({"w_x": ("tp", None), "w_dt": (None, "tp")})
+    else:
+        a.update({"w_bc": (None, None), "w_dt_head": (None, "tp")})
+    return a
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (kernel taps unrolled; supports carry state)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x, conv_w, conv_b, conv_state=None):
+    """x: [B, S, di]; conv_w: [K, di].  Returns (y, new_state [B, K-1, di])."""
+    B, S, di = x.shape
+    K = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)               # [B, S+K-1, di]
+    y = jnp.zeros((B, S, di), jnp.float32)
+    for t in range(K):
+        y = y + xp[:, t:t + S].astype(jnp.float32) * conv_w[t].astype(jnp.float32)
+    y = (y + conv_b.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, S:] if S >= K - 1 else xp[:, -(K - 1):]
+    return jax.nn.silu(y), new_state
+
+
+# ---------------------------------------------------------------------------
+# mamba-1 selective scan (chunked; associative scan within chunk)
+# ---------------------------------------------------------------------------
+
+
+def _scan_chunk_m1(a, b):
+    """First-order recurrence h_t = a_t h_{t-1} + b_t within one chunk via
+    associative scan; a, b: [B, T, d, n] f32. Returns (h_all, carry_op)."""
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return a_cum, b_cum  # h_t = a_cum_t * h0 + b_cum_t
+
+
+def mamba1_mix(params, x_conv, dims: SSMDims, h0=None):
+    """x_conv: [B, S, di] (post-conv, silu'd). Returns (y [B,S,di], h_last)."""
+    B, S, di = x_conv.shape
+    n = dims.d_state
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))           # [di, n]
+    xbc = jnp.einsum("bsd,dr->bsr", x_conv, params["w_x"])      # [B,S,rank+2n]
+    dt_low = xbc[..., : dims.dt_rank]
+    Bt = xbc[..., dims.dt_rank: dims.dt_rank + n].astype(jnp.float32)
+    Ct = xbc[..., dims.dt_rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"])                                    # [B,S,di]
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+    dt = shard(dt, "dp", None, "tp")
+    nc = _n_chunks(S, dims)
+    T = S // nc
+    ys = []
+    h = shard(h0, "dp", "tp", None)
+    for c in range(nc):
+        sl = slice(c * T, (c + 1) * T)
+        dt_c = dt[:, sl]                                        # [B,T,di]
+        a = jnp.exp(dt_c[..., None] * A)                        # [B,T,di,n]
+        b = (dt_c * x_conv[:, sl].astype(jnp.float32))[..., None] * Bt[:, sl][:, :, None, :]
+        a = shard(a, "dp", None, "tp", None)
+        b = shard(b, "dp", None, "tp", None)
+        a_cum, b_cum = _scan_chunk_m1(a, b)
+        h_all = a_cum * h[:, None] + b_cum                      # [B,T,di,n]
+        y_c = jnp.einsum("btdn,btn->btd", h_all, Ct[:, sl])
+        ys.append(shard(y_c, "dp", None, "tp"))
+        h = shard(h_all[:, -1], "dp", "tp", None)
+    y = jnp.concatenate(ys, axis=1) if nc > 1 else ys[0]
+    y = y + params["D"] * x_conv.astype(jnp.float32)
+    return y.astype(x_conv.dtype), h
+
+
+def mamba1_step(params, x_conv, dims: SSMDims, h):
+    """Single decode step; x_conv: [B, 1, di]."""
+    y, h = mamba1_mix(params, x_conv, dims, h0=h)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# mamba-2 / SSD (chunked matmul form)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_mix(params, x_conv, dims: SSMDims, h0=None, dt_pre=None, bc_pre=None):
+    """SSD: x_conv [B, S, di] viewed as [B, S, nh, hd]; scalar decay per head.
+
+    dt_pre/bc_pre: projections computed from the *block input* (see
+    mamba2_block) — passed in because mamba-2 projects dt/B/C from the
+    pre-conv stream.
+    Returns (y [B,S,di], h_last [B,nh,hd,n]).
+    """
+    B, S, di = x_conv.shape
+    nh, hd, n = dims.n_heads, dims.head_dim, dims.d_state
+    xh = x_conv.reshape(B, S, nh, hd)
+    xh = shard(xh, "dp", None, "tp", None)
+    dt = shard(dt_pre, "dp", None, "tp")                        # [B,S,nh] f32
+    Bt, Ct = bc_pre                                             # [B,S,n] f32 each
+    A = -jnp.exp(params["A_log"])                               # [nh]
+    la = dt * A                                                 # [B,S,nh] (<=0)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    nc = _n_chunks(S, dims)
+    T = S // nc
+    ys = []
+    h = shard(h0, "dp", "tp", None, None)
+    for c in range(nc):
+        sl = slice(c * T, (c + 1) * T)
+        la_c = la[:, sl]                                        # [B,T,nh]
+        cum = jnp.cumsum(la_c, axis=1)                          # [B,T,nh]
+        x_c = (xh[:, sl].astype(jnp.float32)
+               * dt[:, sl][..., None])                          # [B,T,nh,hd]
+        x_c = shard(x_c, "dp", None, "tp", None)
+        b_c, c_c = Bt[:, sl], Ct[:, sl]                         # [B,T,n]
+        # intra-chunk: scores[t,j] = C_t·B_j * exp(cum_t - cum_j), j <= t
+        scores = jnp.einsum("btn,bjn->btj", c_c, b_c)           # [B,T,T]
+        decay = cum[:, :, None, :] - cum[:, None, :, :]         # [B,T,T,nh]
+        tri = (jnp.arange(T)[:, None] >= jnp.arange(T)[None, :])
+        l_mat = jnp.where(tri[None, :, :, None], jnp.exp(decay), 0.0)
+        l_mat = shard(l_mat, "dp", None, None, "tp")
+        y_c = jnp.einsum("btj,btjh,bjhd->bthd",
+                         scores, l_mat, x_c)                    # [B,T,nh,hd]
+        # inter-chunk: contribution of the carried state
+        y_in = jnp.einsum("btn,bhdn,bth->bthd", c_c, h,
+                          jnp.exp(shard(cum, "dp", None, "tp")))
+        y_c = y_c + y_in
+        # new carry: h' = exp(cum_T) h + sum_j exp(cum_T - cum_j) B_j x_j
+        w = jnp.exp(cum[:, -1:, :] - cum)                       # [B,T,nh]
+        h = (jnp.exp(cum[:, -1])[..., None, None] * h
+             + jnp.einsum("bjn,bjhd,bjh->bhdn", b_c, x_c, w))
+        h = shard(h, "dp", "tp", None, None)
+        ys.append(shard(y_c, "dp", None, "tp", None))
+    y = jnp.concatenate(ys, axis=1) if nc > 1 else ys[0]
+    y = y + params["D"][:, None] * xh.astype(jnp.float32)
+    return y.reshape(B, S, di).astype(x_conv.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# full blocks (norm handled by caller)
+# ---------------------------------------------------------------------------
+
+
+def mamba_block(params, x, dims: SSMDims, state: Optional[dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B, S, d_model] -> (y, new_state).  state = {conv, ssm} for decode;
+    None during train/prefill-from-scratch (returns final state for cache)."""
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xz = shard(xz, "dp", None, "tp")
+    xs, z = jnp.split(xz, 2, axis=-1)                           # [B,S,di] each
+
+    conv_state = state["conv"] if state else None
+    ssm_state = state["ssm"] if state else None
+
+    if dims.version == 2:
+        # mamba-2 projects dt/B/C from the block input stream
+        dt = jax.nn.softplus(
+            jnp.einsum("bsd,dh->bsh", x, params["w_dt_head"]).astype(jnp.float32)
+            + params["dt_bias"])
+        bc = jnp.einsum("bsd,dn->bsn", x, params["w_bc"]).astype(jnp.float32)
+        Bt, Ct = jnp.split(bc, 2, axis=-1)
+
+    x_conv, conv_state = causal_conv(xs, params["conv_w"], params["conv_b"],
+                                     conv_state)
+    if dims.version == 1:
+        y, ssm_state = mamba1_mix(params, x_conv, dims, h0=ssm_state)
+    else:
+        y, ssm_state = mamba2_mix(params, x_conv, dims, h0=ssm_state,
+                                  dt_pre=dt, bc_pre=(Bt, Ct))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    new_state = {"conv": conv_state, "ssm": ssm_state}
+    return out, new_state
+
+
+def ssm_state_specs(dims: SSMDims, batch: int, dtype):
+    """ShapeDtypeStructs for decode state (per layer)."""
+    if dims.version == 1:
+        ssm = jax.ShapeDtypeStruct((batch, dims.d_inner, dims.d_state), jnp.float32)
+    else:
+        ssm = jax.ShapeDtypeStruct(
+            (batch, dims.n_heads, dims.head_dim, dims.d_state), jnp.float32)
+    conv = jax.ShapeDtypeStruct((batch, dims.d_conv - 1, dims.d_inner), dtype)
+    return {"conv": conv, "ssm": ssm}

@@ -1,0 +1,16 @@
+from repro.roofline.hlo import collective_bytes, parse_hlo_collectives
+from repro.roofline.model import (
+    TPU_V5E,
+    HardwareSpec,
+    model_flops,
+    roofline_terms,
+)
+
+__all__ = [
+    "TPU_V5E",
+    "HardwareSpec",
+    "collective_bytes",
+    "model_flops",
+    "parse_hlo_collectives",
+    "roofline_terms",
+]

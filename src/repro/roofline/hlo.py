@@ -1,0 +1,128 @@
+"""HLO-text collective parser.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so we parse the
+optimized (SPMD-partitioned, per-device) HLO module text and sum the operand
+sizes of every communication op: all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (+ their -start async forms).
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Dict, List, NamedTuple, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# "  %name = bf16[1,2,3]{2,1,0} opcode(%a, %b), attrs" — also matches tuple
+# shapes "(f32[2], f32[3])" whose element shapes we parse individually.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([a-z][\w\-]*)\(([^\n]*)$"
+)
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class CollectiveOp(NamedTuple):
+    name: str
+    opcode: str
+    out_bytes: int
+    operand_bytes: int
+    replica_groups: str
+    promoted: bool            # bf16 collective promoted to f32 by XLA:CPU
+
+
+def parse_hlo_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """One pass: build name->output-bytes, then resolve collective operands.
+
+    XLA:CPU promotes bf16 collectives to f32 (TPU does not); collectives
+    whose operand is produced by a convert-from-bf16 are flagged
+    ``promoted`` so the roofline can report the TPU-accurate (halved) bytes.
+    """
+    out_bytes: Dict[str, int] = {}
+    produced_by_convert: Dict[str, bool] = {}
+    raw: List[Tuple[str, str, int, str, str]] = []
+
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_text, opcode, rest = m.groups()
+        b = _shape_bytes(shape_text)
+        out_bytes[name] = b
+        produced_by_convert[name] = (
+            opcode == "convert" or "convert" in name)
+        base = opcode.removesuffix("-start").removesuffix("-done")
+        if base in COLLECTIVE_OPS and not opcode.endswith("-done"):
+            rg = ""
+            rgm = re.search(r"replica_groups=(\{[^}]*\}|\[[^\]]*\])", rest)
+            if rgm:
+                rg = rgm.group(1)
+            raw.append((name, base, b, rest, rg))
+
+    ops: List[CollectiveOp] = []
+    for name, opcode, b, rest, rg in raw:
+        operand = 0
+        promoted = False
+        # operand list is everything up to the matching close paren
+        depth, end = 1, None
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        arglist = rest[:end] if end is not None else rest
+        for ref in re.findall(r"%([\w.\-]+)", arglist):
+            operand += out_bytes.get(ref, 0)
+            if produced_by_convert.get(ref):
+                promoted = True
+        if operand == 0:
+            # operands may carry inline shapes: "f32[8,128] %param.3"
+            operand = _shape_bytes(arglist)
+        ops.append(CollectiveOp(name, opcode, b, operand, rg, promoted))
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-opcode operand-byte totals + overall sum (per device).
+
+    ``total_bytes_tpu`` halves collectives flagged as bf16->f32 promotions
+    (an XLA:CPU-only pass) — the value a TPU lowering would move.
+    """
+    totals: Dict[str, int] = collections.defaultdict(int)
+    counts: Dict[str, int] = collections.defaultdict(int)
+    adjusted = 0
+    for op in parse_hlo_collectives(hlo_text):
+        totals[op.opcode] += op.operand_bytes
+        counts[op.opcode] += 1
+        adjusted += op.operand_bytes // 2 if op.promoted else op.operand_bytes
+    out = {f"{k}_bytes": v for k, v in sorted(totals.items())}
+    out.update({f"{k}_count": v for k, v in sorted(counts.items())})
+    out["total_bytes"] = sum(totals.values())
+    out["total_bytes_tpu"] = adjusted
+    out["total_count"] = sum(counts.values())
+    return out

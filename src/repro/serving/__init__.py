@@ -1,0 +1,5 @@
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
+
+__all__ = ["Request", "RequestState", "Scheduler", "SchedulerConfig",
+           "StepPlan"]

@@ -1,0 +1,62 @@
+"""Request lifecycle for the serving engine (paper Fig. 1 pipeline)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional
+
+_ids = itertools.count()
+
+
+class RequestState(enum.Enum):
+    ARRIVED = "arrived"            # raw text in API server
+    TOKENIZING = "tokenizing"
+    WAITING = "waiting"            # tokenized, queued in EngineCore
+    PREFILLING = "prefilling"      # chunked prefill in progress
+    DECODING = "decoding"
+    FINISHED = "finished"
+    TIMED_OUT = "timed_out"
+
+
+@dataclasses.dataclass
+class Request:
+    text: str
+    max_new_tokens: int = 16
+    req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    is_victim: bool = False        # attacker/victim experiment tag
+
+    # token state
+    prompt_tokens: Optional[List[int]] = None
+    prefilled: int = 0             # prompt tokens already prefilled
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    # timeline (perf_counter seconds)
+    t_arrival: float = 0.0
+    t_tokenize_start: float = 0.0
+    t_tokenize_done: float = 0.0
+    t_first_scheduled: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    state: RequestState = RequestState.ARRIVED
+
+    @property
+    def n_prompt(self) -> int:
+        return len(self.prompt_tokens or ())
+
+    @property
+    def prefill_remaining(self) -> int:
+        return self.n_prompt - self.prefilled
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token:
+            return self.t_first_token - self.t_arrival
+        return None
+
+    @property
+    def tokenize_latency(self) -> Optional[float]:
+        if self.t_tokenize_done:
+            return self.t_tokenize_done - self.t_tokenize_start
+        return None

@@ -1,0 +1,220 @@
+"""Continuous-batching scheduler with chunked prefill + prefix caching.
+
+Mirrors vLLM V1's scheduling model: every step the EngineCore re-decides
+the batch (this per-step dynamic decision is exactly why CUDA-Graph-style
+whole-sequence capture cannot remove the CPU from the loop — paper §II-A③):
+
+  * running decodes get one slot each (decode-priority, bounded by
+    ``max_num_seqs``);
+  * remaining token budget (``max_tokens_per_step``) is filled with prefill
+    chunks from the waiting queue (chunked prefill);
+  * a trie-based prefix cache lets identical prompt prefixes skip prefill
+    work (attackers in the paper's experiment send identical prompts —
+    vLLM's prefix caching is on by default, so we model it too).
+
+The scheduler is pure control-plane: it never touches tensors, so its CPU
+cost is measurable in isolation (repro.sim calibration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_num_seqs: int = 64             # max concurrent sequences in a step
+    max_tokens_per_step: int = 8192    # token budget (decode=1, prefill=n)
+    prefill_chunk: int = 2048          # max prefill tokens per request/step
+    enable_prefix_cache: bool = True
+    kv_capacity_tokens: int = 1 << 22  # total KV slots across the batch
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One scheduling decision — the broadcast payload (paper §V-B)."""
+    step_id: int
+    prefill: List[Tuple[int, int, int]]   # (req_id, start, length)
+    decode: List[int]                      # req_ids generating 1 token
+    preempted: List[int]
+
+    @property
+    def n_tokens(self) -> int:
+        return sum(l for _, _, l in self.prefill) + len(self.decode)
+
+    def encode(self) -> bytes:
+        import json
+        return json.dumps({
+            "step": self.step_id,
+            "prefill": self.prefill,
+            "decode": self.decode,
+            "preempted": self.preempted,
+        }).encode()
+
+    @classmethod
+    def decode_bytes(cls, raw: bytes) -> "StepPlan":
+        import json
+        d = json.loads(raw)
+        return cls(d["step"], [tuple(p) for p in d["prefill"]],
+                   d["decode"], d["preempted"])
+
+
+class _PrefixTrie:
+    """Block-hash prefix cache (block granularity = ``block`` tokens).
+
+    Chained block hashes (vLLM-style): key(i) = hash(key(i-1), block_i) —
+    O(n) per prompt, not O(n^2/block) full-tuple keys.
+    """
+
+    def __init__(self, block: int = 64):
+        self.block = block
+        self.known: set = set()
+
+    def _chain(self, tokens: List[int]):
+        key = 0
+        for i in range(0, len(tokens) - self.block + 1, self.block):
+            key = hash((key, tuple(tokens[i:i + self.block])))
+            yield i + self.block, key
+
+    def cached_prefix_len(self, tokens: List[int]) -> int:
+        n = 0
+        for end, key in self._chain(tokens):
+            if key in self.known:
+                n = end
+            else:
+                break
+        return n
+
+    def insert(self, tokens: List[int]) -> None:
+        for _, key in self._chain(tokens):
+            self.known.add(key)
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+        self.step_id = 0
+        self.prefix = _PrefixTrie()
+        self.kv_used = 0
+
+    # -- queue management ----------------------------------------------------
+
+    def add_request(self, req: Request) -> None:
+        assert req.prompt_tokens is not None, "tokenize before scheduling"
+        if self.cfg.enable_prefix_cache:
+            hit = self.prefix.cached_prefix_len(req.prompt_tokens)
+            # never skip the whole prompt: the last token must be computed
+            req.prefilled = min(hit, max(req.n_prompt - 1, 0))
+            self.prefix.insert(req.prompt_tokens)
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    def _finish(self, req: Request) -> None:
+        req.state = RequestState.FINISHED
+        self.kv_used -= req.n_prompt + len(req.generated)
+        self.running.remove(req)
+
+    def expire(self, now: float, timeout: float) -> List[Request]:
+        """Abort requests whose client timed out (no first token within
+        ``timeout``) — vLLM cancels on client disconnect, which bounds the
+        queue under open-loop overload."""
+        dead = []
+        for req in list(self.waiting):
+            if not req.t_first_token and now - req.t_arrival > timeout:
+                req.state = RequestState.TIMED_OUT
+                self.waiting.remove(req)
+                dead.append(req)
+        for req in list(self.running):
+            if not req.t_first_token and now - req.t_arrival > timeout:
+                req.state = RequestState.TIMED_OUT
+                self.kv_used -= req.prefilled + len(req.generated)
+                self.running.remove(req)
+                dead.append(req)
+        return dead
+
+    # -- the per-step decision -------------------------------------------------
+
+    def schedule(self) -> Optional[StepPlan]:
+        """Build the next StepPlan, mutating request states."""
+        self.step_id += 1
+        budget = self.cfg.max_tokens_per_step
+        plan = StepPlan(self.step_id, [], [], [])
+
+        # 1. decodes first (latency priority, one token each)
+        for req in self.running:
+            if req.state == RequestState.DECODING and budget > 0:
+                plan.decode.append(req.req_id)
+                budget -= 1
+                self.kv_used += 1
+
+        # 2. continue chunked prefills of running requests
+        for req in self.running:
+            if req.state == RequestState.PREFILLING and budget > 0:
+                n = min(req.prefill_remaining, self.cfg.prefill_chunk, budget)
+                if n > 0:
+                    plan.prefill.append((req.req_id, req.prefilled, n))
+                    req.prefilled += n
+                    budget -= n
+                    self.kv_used += n
+                if req.prefill_remaining == 0:
+                    req.state = RequestState.DECODING
+
+        # 3. admit waiting requests while budget + slots + KV remain
+        while (self.waiting and budget > 0
+               and len(self.running) < self.cfg.max_num_seqs):
+            req = self.waiting[0]
+            need_kv = req.prefill_remaining + req.max_new_tokens
+            if self.kv_used + need_kv > self.cfg.kv_capacity_tokens:
+                break
+            self.waiting.pop(0)
+            self.running.append(req)
+            req.state = RequestState.PREFILLING
+            n = min(req.prefill_remaining, self.cfg.prefill_chunk, budget)
+            plan.prefill.append((req.req_id, req.prefilled, n))
+            req.prefilled += n
+            budget -= n
+            self.kv_used += n
+            if req.prefill_remaining == 0:
+                req.state = RequestState.DECODING
+
+        if not plan.prefill and not plan.decode:
+            self.step_id -= 1
+            return None
+        return plan
+
+    def complete_step(self, plan: StepPlan, now: float) -> List[Request]:
+        """Account one executed step; returns newly finished requests."""
+        done = []
+        by_id = {r.req_id: r for r in self.running}
+        for rid in plan.decode:
+            req = by_id.get(rid)
+            if req is None:
+                continue
+            req.generated.append(0)
+            if not req.t_first_token:
+                req.t_first_token = now
+            if len(req.generated) >= req.max_new_tokens:
+                req.t_done = now
+                done.append(req)
+        # a request whose prefill finished this step produces its first token
+        for rid, _, _ in plan.prefill:
+            req = by_id.get(rid)
+            if req is None:
+                continue
+            if req.state == RequestState.DECODING and not req.t_first_token:
+                req.generated.append(0)
+                req.t_first_token = now
+                if len(req.generated) >= req.max_new_tokens:
+                    req.t_done = now
+                    done.append(req)
+        for req in done:
+            self._finish(req)
+        return done
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

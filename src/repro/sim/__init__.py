@@ -1,0 +1,4 @@
+from repro.sim.core import Sim, Proc
+from repro.sim.serving import ServingModel, ServingParams, WorkloadResult
+
+__all__ = ["Sim", "Proc", "ServingModel", "ServingParams", "WorkloadResult"]

@@ -1,0 +1,329 @@
+"""Serving-pipeline model on the DES core — the core-count sweep instrument.
+
+Runs the REAL ``repro.serving.Scheduler`` (same control logic as the live
+engine) with simulated costs, so core-count sweeps (5..64 cores — impossible
+on this 1-core container) reproduce the paper's Figs 5/7/8/9/10/13.
+
+Per step (sync engine, mirroring core.engine):
+  engine: schedule [cpu] -> broadcast [cpu] -> SPIN on completion  (shm poll)
+  worker i: SPIN on message (shm dequeue) -> dispatch [cpu]
+            -> barrier (all ranks dispatched) -> device [sleep] -> mark
+  tokenizer pool: ``pool_width`` procs, each tokenize = n_tokens/tok_rate CPU.
+
+Spinning procs consume CPU in the GPS model — precisely the §V-B contention:
+idle-but-polling workers steal cycles from the tokenizer and vice versa.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.devmodel import DeviceModel
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
+from repro.sim.core import Event, Sim
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingParams:
+    n_cores: int = 8
+    tp: int = 4                      # worker count (tensor parallel degree)
+    # Tokenizer thread count.  Rayon (HF tokenizers) sizes its pool to the
+    # MACHINE's core count, not the cgroup allocation — so under concurrent
+    # requests the runnable-thread count dwarfs the core budget, and every
+    # engine/worker wake-up pays a multi-quantum scheduling delay.  This is
+    # the paper's §IV-B mechanism ("Rayon thread pool ... faces less
+    # contention" with more cores).
+    pool_width: int = 64
+    quantum: float = 3e-3            # CFS-scale scheduling granularity
+    # calibrated host costs (seconds) — see sim/calibrate.py
+    tok_rate: float = 200_000.0      # tokens/s per core (HF-Rust-class)
+    sched_cost_base: float = 120e-6
+    sched_cost_per_seq: float = 6e-6
+    enqueue_cost: float = 15e-6
+    dequeue_cost: float = 10e-6      # work after the spin
+    dispatch_cost: float = 60e-6     # per-step kernel-launch batch
+    device: DeviceModel = DeviceModel()
+    scheduler: SchedulerConfig = SchedulerConfig()
+    timeout: float = 200.0           # the paper's victim timeout
+    # Fused multi-step decode (models.decode_multi): a decode-only plan
+    # executes k tokens per broadcast/dispatch/barrier round trip.
+    decode_fusion: int = 1
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+    requests: List[Request]
+    dequeue_waits: List[float]       # per worker-step spin seconds
+    barrier_waits: List[float]       # engine completion-poll seconds
+    sched_costs: int
+    sim_time: float
+    saturation_s: float
+
+    def victims(self) -> List[Request]:
+        return [r for r in self.requests if r.is_victim]
+
+    def victim_ttfts(self) -> List[Optional[float]]:
+        out = []
+        for r in self.victims():
+            out.append(r.ttft if r.t_first_token else None)   # None = timeout
+        return out
+
+
+class ServingModel:
+    def __init__(self, params: ServingParams):
+        self.p = params
+        self.sim = Sim(params.n_cores, quantum=params.quantum)
+        self.sched = Scheduler(params.scheduler)
+        self.requests: List[Request] = []
+        self.tok_queue: List[Request] = []
+        self.tok_ev = self.sim.event("tok-queue")
+        self.engine_ev = self.sim.event("engine-input")
+        self.msg_ev: Dict[int, Event] = {}        # step -> broadcast publish
+        self.dispatched: Dict[int, int] = {}      # step -> ranks dispatched
+        self.all_disp_ev: Dict[int, Event] = {}
+        self.done_ev: Dict[int, Event] = {}
+        self.dequeue_waits: List[float] = []
+        self.barrier_waits: List[float] = []
+        self.done_events: Dict[int, Event] = {}   # req_id -> completion event
+        self.extra_procs: List = []
+        self.n_steps = 0
+        self._stopped = False
+
+    # -- request injection -------------------------------------------------------
+
+    def add_request(self, t_arrival: float, n_tokens: int,
+                    max_new_tokens: int = 8, is_victim: bool = False,
+                    stream: int = 0) -> Request:
+        """``stream`` namespaces the token ids: requests in different streams
+        share no prefix (attackers with identical prompts DO share one and
+        get vLLM-style prefix-cache hits)."""
+        req = Request(text="", max_new_tokens=max_new_tokens,
+                      is_victim=is_victim)
+        base = stream << 24
+        req.prompt_tokens = list(range(base, base + n_tokens))
+        req.t_arrival = t_arrival
+        self.requests.append(req)
+
+        def arrive():
+            self.tok_queue.append(req)
+            ev, self.tok_ev = self.tok_ev, self.sim.event("tok-queue")
+            self.sim.fire(ev)
+
+        self.sim.at(t_arrival, arrive)
+        return req
+
+    def inject_now(self, n_tokens: int, max_new_tokens: int = 8,
+                   is_victim: bool = False, stream: int = 0) -> Request:
+        """Add a request at the current sim time (for issuer procs)."""
+        req = Request(text="", max_new_tokens=max_new_tokens,
+                      is_victim=is_victim)
+        base = stream << 24
+        req.prompt_tokens = list(range(base, base + n_tokens))
+        req.t_arrival = self.sim.now
+        self.requests.append(req)
+        self.tok_queue.append(req)
+        ev, self.tok_ev = self.tok_ev, self.sim.event("tok-queue")
+        self.sim.fire(ev)
+        return req
+
+    # -- procs -------------------------------------------------------------------
+
+    def _tokenizer_dispatcher(self):
+        """Models the Rayon pool: each encode fans out over ``pool_width``
+        worker shards (HF tokenizers parallelize word-level within one
+        text), so ANY active tokenization makes the whole pool runnable —
+        the §IV-B contention mechanism."""
+        p = self.p
+        while not self._stopped:
+            if not self.tok_queue:
+                yield ("wait", self.tok_ev)
+                continue
+            req = self.tok_queue.pop(0)
+            req.t_tokenize_start = self.sim.now
+            shards = max(1, p.pool_width)
+            work = req.n_prompt / p.tok_rate / shards
+            done = {"n": 0}
+            join_ev = self.sim.event(f"tok-join-{req.req_id}")
+
+            def shard_proc(work=work, done=done, join_ev=join_ev,
+                           shards=shards):
+                yield ("cpu", work)
+                done["n"] += 1
+                if done["n"] == shards:
+                    self.sim.fire(join_ev)
+
+            for s in range(shards):
+                self.sim.spawn(f"tokshard", shard_proc())
+            yield ("wait", join_ev)
+            req.t_tokenize_done = self.sim.now
+            self.sched.add_request(req)
+            ev, self.engine_ev = self.engine_ev, self.sim.event("engine-input")
+            self.sim.fire(ev)
+
+    def _get_step_events(self, step: int) -> Tuple[Event, Event]:
+        """(msg published, step done) events, created lazily by either side."""
+        if step not in self.msg_ev:
+            self.msg_ev[step] = self.sim.event(f"msg{step}")
+            self.done_ev[step] = self.sim.event(f"done{step}")
+            self.dispatched[step] = 0
+        return self.msg_ev[step], self.done_ev[step]
+
+    def _engine_proc(self):
+        p = self.p
+        while not self._stopped:
+            plan = None
+            if self.sched.has_work:
+                for req in self.sched.expire(self.sim.now, p.timeout):
+                    ev = self.done_events.get(req.req_id)
+                    if ev is not None:
+                        self.sim.fire(ev)
+                yield ("cpu", p.sched_cost_base
+                       + p.sched_cost_per_seq * len(self.sched.running))
+                plan = self.sched.schedule()
+            if plan is None:
+                yield ("wait", self.engine_ev)
+                continue
+            step = plan.step_id
+            self.n_steps += 1
+            msg, done = self._get_step_events(step)
+            yield ("cpu", p.enqueue_cost)
+            self.sim.fire(msg)
+            # completion poll: busy-wait on the board (paper §V-B)
+            t0 = self.sim.now
+            yield ("spin", done)
+            self.barrier_waits.append(self.sim.now - t0)
+            for _ in range(self._fusion_rounds(plan)):
+                for req in self.sched.complete_step(plan, self.sim.now):
+                    ev = self.done_events.get(req.req_id)
+                    if ev is not None:
+                        self.sim.fire(ev)
+
+    def _fusion_rounds(self, plan: Optional[StepPlan]) -> int:
+        """Decode-only plans run ``decode_fusion`` tokens per dispatch
+        (models.decode_multi — the persistent-kernel analogue)."""
+        if plan is None or self.p.decode_fusion <= 1 or plan.prefill:
+            return 1
+        return self.p.decode_fusion
+
+    def _worker_proc(self, rank: int):
+        p = self.p
+        step = 1
+        while not self._stopped:
+            msg, done = self._get_step_events(step)
+            t0 = self.sim.now
+            yield ("spin", msg)                     # shm dequeue busy-wait
+            self.dequeue_waits.append(self.sim.now - t0)
+            yield ("cpu", p.dequeue_cost + p.dispatch_cost)
+            self.dispatched[step] += 1
+            if self.dispatched[step] == p.tp:       # last rank arms device
+                plan_t = self._plan_time(step)
+                self.sim.at(self.sim.now + plan_t,
+                            lambda d=done: self.sim.fire(d))
+            yield ("wait", done)                    # sync execute
+            step += 1
+
+    def _plan_time(self, step: int) -> float:
+        plan = self._plans.get(step)
+        if plan is None:
+            return 1e-3
+        return self.p.device.step_time(plan) * self._fusion_rounds(plan)
+
+    # -- run ---------------------------------------------------------------------
+
+    def run(self, horizon: float = 400.0) -> WorkloadResult:
+        # wrap schedule() to record plans for _plan_time
+        self._plans: Dict[int, StepPlan] = {}
+        orig_schedule = self.sched.schedule
+
+        def schedule_wrapper():
+            plan = orig_schedule()
+            if plan is not None:
+                self._plans[plan.step_id] = plan
+            return plan
+
+        self.sched.schedule = schedule_wrapper   # type: ignore[assignment]
+
+        # Rayon pool: requests are serviced one at a time (GIL holds the
+        # Python side), each fanning out across the whole thread pool.
+        self.sim.spawn("tok-dispatch", self._tokenizer_dispatcher())
+        self.sim.spawn("engine", self._engine_proc())
+        for r in range(self.p.tp):
+            self.sim.spawn(f"worker{r}", self._worker_proc(r))
+        for i, gen in enumerate(self.extra_procs):
+            self.sim.spawn(f"extra{i}", gen)
+        self.sim.run(until=horizon)
+        # mark timeouts (including ones the engine never got to expire)
+        for req in self.requests:
+            if not req.t_first_token:
+                ttft_so_far = self.sim.now - req.t_arrival
+                if ttft_so_far >= self.p.timeout - 1e-9:
+                    req.state = RequestState.TIMED_OUT
+        return WorkloadResult(
+            requests=self.requests,
+            dequeue_waits=self.dequeue_waits,
+            barrier_waits=self.barrier_waits,
+            sched_costs=self.n_steps,
+            sim_time=self.sim.now,
+            saturation_s=self.sim.saturation_seconds(),
+        )
+
+
+def llama8b_tp4_params(n_cores: int, tp: int = 4,
+                       pool_width: int = 64) -> ServingParams:
+    """Paper-scale preset: Llama-3.1-8B, TP=4, H100/Blackwell-class devices.
+
+    Device coefficients from first principles: prefill 2N FLOPs/token over
+    4 chips at ~40% MFU -> ~1e-5 s/token; decode is weight-bandwidth-bound
+    -> ~2 ms floor; KV capacity ~2.3M tokens (4x80GB minus weights).
+    Host costs from sim/calibrate.py scaled to a Rust-class tokenizer.
+    """
+    return ServingParams(
+        n_cores=n_cores, tp=tp, pool_width=pool_width,
+        tok_rate=200_000.0,
+        device=DeviceModel(t_fixed=2e-3, t_prefill_tok=1e-5,
+                           t_decode_seq=2e-5, max_step=2.0),
+        scheduler=SchedulerConfig(max_num_seqs=64,
+                                  max_tokens_per_step=8192,
+                                  prefill_chunk=2048,
+                                  kv_capacity_tokens=2_300_000),
+    )
+
+
+def attacker_victim_workload(params: ServingParams, *, attacker_rps: float,
+                             attacker_tokens: int, n_victims: int = 5,
+                             victim_tokens: int = 2_800,
+                             duration: float = 30.0,
+                             victim_new_tokens: int = 8,
+                             victim_start: float = 1.0,
+                             victim_spacing: float = 2.0,
+                             distinct_attackers: bool = True,
+                             horizon: float = 400.0) -> WorkloadResult:
+    """The paper's §IV-B experiment: periodic attackers + sequential victims."""
+    model = ServingModel(params)
+    t = 0.0
+    i = 0
+    while t < duration:
+        model.add_request(t, attacker_tokens, max_new_tokens=4,
+                          stream=(1 + i) if distinct_attackers else 1)
+        i += 1
+        t = i / attacker_rps
+    # victims issued SEQUENTIALLY: the next starts when the previous
+    # completes (the paper's §IV-B protocol; Fig. 8)
+    def victim_issuer():
+        yield ("sleep", victim_start)
+        for v in range(n_victims):
+            req = model.inject_now(victim_tokens,
+                                   max_new_tokens=victim_new_tokens,
+                                   is_victim=True, stream=0)
+            ev = model.sim.event(f"victim-done-{v}")
+            model.done_events[req.req_id] = ev
+            # wake at completion OR client timeout, whichever first
+            model.sim.at(model.sim.now + params.timeout,
+                         lambda e=ev: model.sim.fire(e))
+            yield ("wait", ev)
+            yield ("sleep", victim_spacing)
+
+    model.extra_procs.append(victim_issuer())
+    return model.run(horizon=horizon)

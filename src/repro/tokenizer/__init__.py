@@ -1,0 +1,4 @@
+from repro.tokenizer.bpe import BPETokenizer, train_bpe
+from repro.tokenizer.pool import TokenizerPool
+
+__all__ = ["BPETokenizer", "train_bpe", "TokenizerPool"]

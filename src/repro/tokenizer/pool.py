@@ -1,0 +1,68 @@
+"""Tokenizer thread pool — the TOKENIZERS_PARALLELISM analogue.
+
+The paper's §IV-B mechanism: the HF/Rayon tokenizer spawns parallel threads
+inside the API-server process, and under concurrent requests those threads
+contend with the engine/worker processes for the same CPU cores.  This pool
+reproduces that structure: ``pool_width`` is our TOKENIZERS_PARALLELISM
+knob, and ``measure=True`` records per-request tokenize latencies that the
+calibration pass (repro.sim.calibrate) feeds into the simulator.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.tokenizer.bpe import BPETokenizer
+
+
+class TokenizerPool:
+    def __init__(self, tokenizer: BPETokenizer, pool_width: int = 1,
+                 measure: bool = False):
+        self.tokenizer = tokenizer
+        self.pool_width = max(1, pool_width)
+        self.measure = measure
+        self._pool = (cf.ThreadPoolExecutor(max_workers=self.pool_width,
+                                            thread_name_prefix="tok")
+                      if self.pool_width > 1 else None)
+        self.latencies: List[Tuple[float, float, int]] = []  # (t0, dt, n_tok)
+        self._lock = threading.Lock()
+
+    def _encode_one(self, text: str) -> List[int]:
+        t0 = time.perf_counter()
+        ids = self.tokenizer.encode(text)
+        if self.measure:
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self.latencies.append((t0, dt, len(ids)))
+        return ids
+
+    def encode(self, text: str) -> List[int]:
+        return self._encode_one(text)
+
+    def encode_batch(self, texts: Sequence[str]) -> List[List[int]]:
+        """Parallel batch encode (the Rayon-style fan-out)."""
+        if self._pool is None or len(texts) == 1:
+            return [self._encode_one(t) for t in texts]
+        return list(self._pool.map(self._encode_one, texts))
+
+    def submit(self, text: str) -> "cf.Future[List[int]]":
+        """Async single-request encode (API-server request path)."""
+        if self._pool is None:
+            f: cf.Future = cf.Future()
+            f.set_result(self._encode_one(text))
+            return f
+        return self._pool.submit(self._encode_one, text)
+
+    def throughput_tokens_per_s(self) -> Optional[float]:
+        with self._lock:
+            if not self.latencies:
+                return None
+            toks = sum(n for _, _, n in self.latencies)
+            secs = sum(dt for _, dt, _ in self.latencies)
+        return toks / secs if secs > 0 else None
+
+    def shutdown(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)

@@ -1,0 +1,130 @@
+"""Checkpoint save/restore: step-atomic directories + async writer.
+
+Fault-tolerance contract:
+  * each checkpoint is a directory ``step_NNNNNNNN`` written under a
+    ``.tmp`` name and atomically renamed — a crash mid-write never corrupts
+    the latest checkpoint;
+  * ``restore_latest`` picks the newest complete checkpoint, so a restarted
+    job (launcher ``--resume auto``) continues from the last good step;
+  * the async writer moves serialization off the training thread (the
+    control-plane lesson of the paper applied to training: never let host
+    I/O stall the device step);
+  * leaves are saved as raw .npy plus a json manifest of the treedef.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import re
+import shutil
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p)[1:-1] if str(p).startswith("[") else str(p)
+                       for p in path)
+        key = re.sub(r"[^A-Za-z0-9_./-]", "_", key)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest = {}
+    for i, (key, leaf) in enumerate(_flatten_with_paths(tree)):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest[key] = {"file": fname, "dtype": str(arr.dtype),
+                         "shape": list(arr.shape)}
+    (tmp / "manifest.json").write_text(json.dumps(
+        {"step": step, "leaves": manifest}))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                     # atomic publish
+    return final
+
+
+def restore(path: str | Path, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays/specs)."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())["leaves"]
+    keys = [k for k, _ in _flatten_with_paths(like)]
+    leaves = []
+    for i, key in enumerate(keys):
+        rec = manifest[key]
+        leaves.append(np.load(path / rec["file"]))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.iterdir():
+        m = re.fullmatch(r"step_(\d+)", p.name)
+        if m and (p / "manifest.json").exists():
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_latest(ckpt_dir: str | Path, like: Any
+                   ) -> Tuple[Optional[int], Any]:
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, like
+    return step, restore(Path(ckpt_dir) / f"step_{step:08d}", like)
+
+
+class AsyncCheckpointer:
+    """One-deep async writer: snapshot on the caller, serialize off-thread."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._pool = cf.ThreadPoolExecutor(max_workers=1,
+                                           thread_name_prefix="ckpt")
+        self._pending: Optional[cf.Future] = None
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+
+        def job():
+            save(self.ckpt_dir, step, host_tree)
+            self._gc()
+
+        self._pending = self._pool.submit(job)
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for p in self.ckpt_dir.iterdir()
+            if (m := re.fullmatch(r"step_(\d+)", p.name)))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.ckpt_dir / f"step_{s:08d}",
+                          ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def close(self) -> None:
+        self.wait()
+        self._pool.shutdown()

@@ -1,0 +1,97 @@
+"""Training step: microbatched grad accumulation + ZeRO grad sharding.
+
+``train_step`` scans over ``n_micro`` microbatches, accumulating f32 grads
+constrained to the ZeRO-1 layout (params' sharding + the data axis folded
+into the largest free dim).  XLA then reduce-scatters each microbatch's
+gradient into the accumulator instead of all-reducing a full copy — grads,
+m and v all live dp-sharded, and the param update all-gathers once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import current as mesh_ctx
+from repro.models import model as M
+from repro.train import optim
+
+
+def pick_n_micro(cfg: ModelConfig, global_batch: int, seq_len: int,
+                 budget_bytes: float = 256e6, cap: int = 8) -> int:
+    """Smallest power-of-two microbatch count keeping the per-device
+    residual-stream slab under ``budget_bytes``."""
+    dp = max(mesh_ctx().dp, 1)
+    per_dev = max(global_batch // dp, 1)
+    slab = per_dev * seq_len * cfg.d_model * 2  # bf16
+    n = 1
+    while (slab / n > budget_bytes and n < cap
+           and global_batch % (2 * n) == 0
+           and global_batch // (2 * n) >= dp):
+        n *= 2
+    return n
+
+
+def make_train_step(cfg: ModelConfig, ocfg: optim.AdamWConfig, *,
+                    n_micro: int = 1, unroll: bool = False,
+                    remat: bool = True, ce_chunks: int = 8,
+                    grad_shardings=None, param_shardings=None):
+    """Builds train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``grad_shardings``: optional ZeRO-1 NamedSharding tree; the accumulated
+    grads are constrained to it so each microbatch grad reduce-scatters.
+    """
+
+    def loss(p, b):
+        return M.loss_fn(p, cfg, b, unroll=unroll, remat=remat,
+                         ce_chunks=ce_chunks)
+
+    def constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: x if s is None else jax.lax.with_sharding_constraint(x, s),
+            g, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+            # reduce-scatter the bf16 grads into the ZeRO layout, THEN upcast
+            # (halves the collective bytes vs f32 grads)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32),
+                                 constrain(grads))
+        else:
+            def to_micro(key, x):
+                if key == "mrope_positions":      # [3, B, S]: batch on dim 1
+                    b = x.shape[1]
+                    y = x.reshape((x.shape[0], n_micro, b // n_micro)
+                                  + x.shape[2:])
+                    return jnp.swapaxes(y, 0, 1)  # [n_micro, 3, B/n, S]
+                return x.reshape((n_micro, x.shape[0] // n_micro)
+                                 + x.shape[1:])
+
+            micro = {k: to_micro(k, v) for k, v in batch.items()}
+
+            def body(gsum, b):
+                (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, b)
+                g = constrain(g)     # bf16 reduce-scatter into ZeRO layout
+                gsum = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), gsum, g)
+                return gsum, (l, m)
+
+            g0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            gsum, (ls, ms) = jax.lax.scan(body, g0, micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            l = jnp.mean(ls)
+            metrics = jax.tree.map(jnp.mean, ms)
+
+        new_p, new_o, om = optim.apply_updates(params, grads, opt_state, ocfg,
+                                               param_shardings=param_shardings)
+        return new_p, new_o, dict(metrics, loss=l, **om)
+
+    return train_step

@@ -1,0 +1,63 @@
+"""Shared fixtures: reduced per-family configs for CPU smoke tests.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests must see the
+real single CPU device (the 512-device override belongs to launch/dryrun.py
+alone, per the assignment spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import MoEConfig, SSMConfig, EncDecConfig
+
+
+def tiny(name: str):
+    """Reduced config of the same family as the assigned arch."""
+    cfg = get_config(name)
+    over = dict(
+        n_layers=max(2, (cfg.local_global_ratio[0] + cfg.local_global_ratio[1])
+                     if cfg.local_global_ratio else 2),
+        d_model=64,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=257,
+        vocab_pad_multiple=8,
+        # float32 on CPU: keeps prefill-vs-decode comparisons deterministic
+        # (bf16 noise can flip MoE top-k routing); bf16 is exercised by the
+        # full-scale dry-run configs.
+        dtype="float32",
+    )
+    if cfg.n_heads:
+        over.update(n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 4) or 1, d_head=16)
+    if cfg.mrope_sections is not None:
+        over["mrope_sections"] = (2, 3, 3)   # sums to head_dim//2 = 8
+    if cfg.moe is not None:
+        # capacity_factor 4.0: effectively dropless at test sizes, so the
+        # prefill-vs-decode consistency oracle is exact (capacity drops are
+        # covered separately in test_moe.py).
+        over["moe"] = MoEConfig(
+            n_experts=8, top_k=2, d_ff_expert=32,
+            n_shared_experts=cfg.moe.n_shared_experts and 2,
+            capacity_factor=4.0)
+    if cfg.ssm is not None:
+        over["ssm"] = SSMConfig(version=cfg.ssm.version, d_state=8, d_conv=4,
+                                expand=2, head_dim=16, dt_rank=8, chunk=16)
+    if cfg.encdec is not None:
+        over["encdec"] = EncDecConfig(n_encoder_layers=2, n_encoder_ctx=12)
+    if cfg.hybrid_period is not None:
+        over["n_layers"] = 5        # 1 full period of 3 + tail of 2
+        over["hybrid_period"] = 3
+    if cfg.sliding_window is not None:
+        over["sliding_window"] = 8
+    return cfg.scaled(**over)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+ALL_ARCH_NAMES = sorted(ARCHS)

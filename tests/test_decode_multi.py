@@ -1,0 +1,71 @@
+"""Fused multi-step decode == sequential decode_step loop (greedy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+
+from conftest import tiny
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "falcon-mamba-7b",
+                                  "gemma3-12b"])
+def test_decode_multi_matches_sequential(name, rng):
+    cfg = tiny(name)
+    params = M.init_params(rng, cfg)
+    B, n_pre, k = 2, 6, 4
+    toks = jax.random.randint(jax.random.PRNGKey(9), (B, n_pre),
+                              0, cfg.vocab_size)
+    logits, cache = M.prefill(params, cfg, toks)
+    specs = M.cache_specs(cfg, B, n_pre + k)
+    cache = jax.tree.map(
+        lambda c, s: jnp.pad(c, [(0, d - g) for g, d in
+                                 zip(c.shape, s.shape)]), cache, specs)
+
+    first = jnp.argmax(logits[:, 0, : cfg.vocab_size], -1
+                       ).astype(jnp.int32)[:, None]
+
+    # sequential oracle
+    seq_out = []
+    c1, tok, clen = cache, first, n_pre
+    for _ in range(k):
+        lg, c1 = M.decode_step(params, cfg, tok, c1, jnp.int32(clen))
+        nxt = jnp.argmax(lg[:, 0, : cfg.vocab_size], -1).astype(jnp.int32)
+        seq_out.append(nxt)
+        tok = nxt[:, None]
+        clen += 1
+    seq_out = jnp.stack(seq_out, 1)
+
+    # fused
+    fused, _, new_clen = M.decode_multi(params, cfg, first, cache,
+                                        jnp.int32(n_pre), k)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(seq_out))
+    assert int(new_clen) == n_pre + k
+
+
+def test_decode_multi_eos_masking(rng):
+    cfg = tiny("olmo-1b")
+    params = M.init_params(rng, cfg)
+    B, n_pre, k = 1, 4, 6
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, n_pre),
+                              0, cfg.vocab_size)
+    logits, cache = M.prefill(params, cfg, toks)
+    specs = M.cache_specs(cfg, B, n_pre + k)
+    cache = jax.tree.map(
+        lambda c, s: jnp.pad(c, [(0, d - g) for g, d in
+                                 zip(c.shape, s.shape)]), cache, specs)
+    first = jnp.argmax(logits[:, 0, : cfg.vocab_size], -1
+                       ).astype(jnp.int32)[:, None]
+    # force eos = whatever the first generated token is => everything after
+    # must repeat eos
+    eos = int(jnp.argmax(
+        M.decode_step(params, cfg, first, cache, jnp.int32(n_pre))[0]
+        [:, 0, : cfg.vocab_size], -1)[0])
+    out, _, _ = M.decode_multi(params, cfg, first, cache, jnp.int32(n_pre),
+                               k, eos_id=eos)
+    got = np.asarray(out)[0]
+    assert got[0] == eos
+    assert (got == eos).all()

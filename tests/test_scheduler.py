@@ -1,0 +1,112 @@
+"""Continuous-batching scheduler invariants (incl. hypothesis)."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+def _req(n_tokens: int, max_new: int = 4, stream: int = 0) -> Request:
+    r = Request(text="", max_new_tokens=max_new)
+    base = stream << 24
+    r.prompt_tokens = list(range(base, base + n_tokens))
+    return r
+
+
+def drain(sched: Scheduler, max_steps: int = 10_000):
+    plans = []
+    for _ in range(max_steps):
+        plan = sched.schedule()
+        if plan is None:
+            break
+        plans.append(plan)
+        sched.complete_step(plan, float(len(plans)))
+    return plans
+
+
+def test_single_request_lifecycle():
+    cfg = SchedulerConfig(max_tokens_per_step=1024, prefill_chunk=512,
+                          enable_prefix_cache=False)
+    sched = Scheduler(cfg)
+    r = _req(1200, max_new=3)
+    sched.add_request(r)
+    plans = drain(sched)
+    assert r.state == RequestState.FINISHED
+    assert len(r.generated) == 3
+    # prefill chunked: 1200 tokens in ceil(1200/512)=3 chunks
+    pre = [p for p in plans if p.prefill]
+    assert sum(l for p in pre for _, _, l in p.prefill) == 1200
+
+
+def test_decode_priority_over_prefill():
+    cfg = SchedulerConfig(max_tokens_per_step=64, prefill_chunk=64,
+                          enable_prefix_cache=False)
+    sched = Scheduler(cfg)
+    a = _req(64, max_new=8, stream=1)
+    sched.add_request(a)
+    p1 = sched.schedule()
+    sched.complete_step(p1, 1.0)        # a now decoding
+    b = _req(640, max_new=1, stream=2)
+    sched.add_request(b)
+    p2 = sched.schedule()
+    assert a.req_id in p2.decode        # decode scheduled despite prefill
+    assert p2.n_tokens <= 64
+
+
+def test_prefix_cache_skips_shared_prefill():
+    cfg = SchedulerConfig(enable_prefix_cache=True)
+    sched = Scheduler(cfg)
+    a = _req(512, stream=7)
+    sched.add_request(a)
+    b = _req(512, stream=7)             # identical prompt
+    sched.add_request(b)
+    assert b.prefilled >= 512 - 64 - 1  # all but the tail skipped
+    assert a.prefilled == 0
+
+
+def test_expiry_releases_queue():
+    sched = Scheduler(SchedulerConfig(enable_prefix_cache=False))
+    a = _req(128)
+    a.t_arrival = 0.0
+    sched.add_request(a)
+    dead = sched.expire(now=300.0, timeout=200.0)
+    assert dead == [a] and a.state == RequestState.TIMED_OUT
+    assert not sched.has_work
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    lens=st.lists(st.integers(1, 3000), min_size=1, max_size=12),
+    budget=st.integers(64, 4096),
+    chunk=st.integers(32, 2048),
+)
+def test_invariants_under_random_workloads(lens, budget, chunk):
+    cfg = SchedulerConfig(max_tokens_per_step=budget,
+                          prefill_chunk=chunk,
+                          enable_prefix_cache=False,
+                          kv_capacity_tokens=1 << 20)
+    sched = Scheduler(cfg)
+    reqs = [_req(n, max_new=2, stream=i + 1) for i, n in enumerate(lens)]
+    for r in reqs:
+        sched.add_request(r)
+    step = 0
+    while sched.has_work and step < 20_000:
+        plan = sched.schedule()
+        if plan is None:
+            break
+        step += 1
+        # INVARIANT: token budget never exceeded
+        assert plan.n_tokens <= budget
+        # INVARIANT: per-request prefill chunk bound
+        for _, _, l in plan.prefill:
+            assert 0 < l <= chunk
+        # INVARIANT: kv accounting never negative / beyond capacity
+        assert 0 <= sched.kv_used <= cfg.kv_capacity_tokens
+        sched.complete_step(plan, float(step))
+    # every request eventually finishes with exactly max_new tokens
+    for r in reqs:
+        assert r.state == RequestState.FINISHED, (r.req_id, r.state)
+        assert len(r.generated) == 2
+        assert r.prefilled == r.n_prompt

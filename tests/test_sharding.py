@@ -1,0 +1,86 @@
+"""Sharding-context + dry-run plumbing tests (1 real device)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, CELLS_BY_NAME, cell_applicable, get_config, input_specs
+from repro.dist.sharding import current, sequence_sharding, spec_for, use_mesh
+from repro.launch.mesh import make_debug_mesh
+from repro.models import model as M
+
+
+def test_no_mesh_is_noop():
+    ctx = current()
+    assert not ctx.active and ctx.tp == 1 and ctx.dp == 1
+    x = jax.numpy.ones((4, 4))
+    from repro.dist.sharding import shard
+    assert shard(x, "dp", "tp") is x
+
+
+def test_mesh_ctx_resolution():
+    mesh = make_debug_mesh((1, 1), ("data", "model"))
+    with use_mesh(mesh) as ctx:
+        assert ctx.tp == 1 and ctx.dp == 1
+        assert ctx.pspec("dp", "tp") == P("data", "model")
+        with sequence_sharding(False):
+            assert ctx.resolve("sp") is None
+        with sequence_sharding(True):
+            assert ctx.resolve("sp") == ("model",)
+
+
+def test_spec_for_divisibility_fallback():
+    mesh = make_debug_mesh((1, 1), ("data", "model"))
+    with use_mesh(mesh):
+        # axis size 1 => sharding is a no-op and the spec drops the axis
+        s = spec_for((3, 4), "dp", "tp")
+        assert s == P(None, None)
+
+
+def test_param_axes_tree_matches_params():
+    """Every arch: the axes tree must structurally match init_params."""
+    for name in ARCHS:
+        cfg = get_config(name).scaled(dtype="float32")
+        shapes = jax.eval_shape(lambda k, c=cfg: M.init_params(k, c),
+                                jax.random.PRNGKey(0))
+        sh = M.param_shardings(cfg, shapes)   # no mesh -> tree of None
+        # structural zip must not raise
+        jax.tree.map(lambda a, b: None, shapes, sh,
+                     is_leaf=lambda x: x is None)
+
+
+def test_cell_applicability_matrix():
+    """Exactly the documented skips: long_500k on pure full-attention."""
+    n_ok, n_skip = 0, 0
+    for name, cfg in ARCHS.items():
+        for cell_name, cell in CELLS_BY_NAME.items():
+            ok, reason = cell_applicable(cfg, cell)
+            if ok:
+                n_ok += 1
+            else:
+                n_skip += 1
+                assert cell_name == "long_500k"
+    assert n_ok + n_skip == 40
+    assert n_skip == 7                   # 10 archs - 3 long-context capable
+
+
+def test_input_specs_shapes():
+    cfg = get_config("qwen2-vl-7b")
+    cell = CELLS_BY_NAME["decode_32k"]
+    specs = input_specs(cfg, cell)
+    assert specs["tokens"].shape == (128, 1)
+    assert specs["mrope_positions"].shape == (3, 128, 1)
+    assert "frames" not in specs
+    w = input_specs(get_config("whisper-small"), CELLS_BY_NAME["train_4k"])
+    assert w["frames"].shape == (256, 1500, 768)
+
+
+def test_cache_specs_gemma_ring_sizes():
+    cfg = get_config("gemma3-12b")
+    specs = M.cache_specs(cfg, batch=1, seq=524_288)
+    st = specs["dense_lg"]
+    # 5 local layers ring-capped at the window, 1 global full-length
+    assert st["layer0"]["k"].shape[2] == cfg.sliding_window
+    assert st["layer5"]["k"].shape[2] == 524_288

