@@ -217,8 +217,10 @@ class ServingSystem:
             })
             return toks
 
-        if self.pool and self.pool._pool is not None:
-            self.pool._pool.submit(tokenize_and_enqueue)
+        if self.pool is not None:
+            fut = self.pool.submit(tokenize_and_enqueue)
+            if fut.done():
+                fut.result()   # pool_width==1 runs inline: propagate errors
         else:
             tokenize_and_enqueue()
         return rid

@@ -1,0 +1,16 @@
+"""Distributed-execution layer: logical-axis sharding (repro.dist.sharding).
+
+The model/train/launch stack programs against *logical* axes ("dp", "tp",
+"sp") and this package resolves them onto whatever physical mesh is active,
+degrading to single-device no-ops when none is.
+"""
+from repro.dist.sharding import (  # noqa: F401
+    MeshContext,
+    current,
+    pad_to_multiple,
+    sequence_sharding,
+    shard,
+    shard_map,
+    spec_for,
+    use_mesh,
+)

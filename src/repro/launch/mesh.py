@@ -8,14 +8,20 @@ from __future__ import annotations
 import jax
 
 
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """The single mesh-construction entry point.
+
+    Every mesh in the codebase — test, dry-run, production — goes through
+    here so axis-name conventions ("model" = tensor axis, everything else
+    data; see repro.dist.sharding.TP_AXIS) stay in one place.  The default
+    is the tiny CPU-test mesh over however many real devices exist.
+    """
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 256 chips (16, 16) -> ("data", "model").
     Multi-pod: 2 pods x 256 chips (2, 16, 16) -> ("pod", "data", "model")."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
-    """Tiny mesh over however many real devices exist (CPU tests)."""
-    return jax.make_mesh(shape, axes)
+    if multi_pod:
+        return make_debug_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_debug_mesh((16, 16), ("data", "model"))

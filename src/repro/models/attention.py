@@ -146,7 +146,7 @@ def attn_init(key, d_model: int, layout: HeadLayout, dtype, *, bias: bool = Fals
 
 def attn_param_axes(layout: HeadLayout, *, bias: bool = False, qk_norm: bool = False):
     """Logical sharding axes per param (dims match attn_init shapes)."""
-    kv_ax = "tp" if layout.kv_store % max(mesh_ctx().tp, 1) == 0 else None
+    kv_ax = "tp" if layout.kv_store % mesh_ctx().tp == 0 else None
     p = {
         "wq": (None, "tp", None),
         "wk": (None, kv_ax, None),
@@ -277,7 +277,9 @@ def flash_attention(q, k, v, layout: HeadLayout, *, causal: bool,
             if window is not None:
                 lo = max(0, (i - (window + blk - 1) // blk)) * blk
         else:
-            lo, hi = 0, S
+            # bidirectional: the full KV length, which differs from the
+            # query length S for cross-attention (encoder context)
+            lo, hi = 0, kx.shape[1]
         outs.append(block(qi, kx[:, lo:hi], vx[:, lo:hi], i, lo, hi))
     o = jnp.concatenate(outs, axis=1) if nb > 1 else outs[0]
     return shard(o.reshape(B, S, layout.hp, dh), "dp", None, "tp", None)

@@ -34,6 +34,7 @@ from repro.configs.base import ModelConfig, ShapeCell
 from repro.dist.sharding import (
     current as mesh_ctx,
     shard,
+    shard_map,
     spec_for,
 )
 from repro.models import attention as attn_mod
@@ -145,7 +146,7 @@ def _layout(cfg: ModelConfig) -> Optional[HeadLayout]:
     if cfg.n_heads == 0:
         return None
     return head_layout(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
-                       max(mesh_ctx().tp, 1))
+                       mesh_ctx().tp)
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +172,7 @@ def _layer_init(key, spec: LayerSpec, cfg: ModelConfig, layout):
         p["cross"] = attn_init(ks[1], cfg.d_model, layout, dtype,
                                bias=cfg.qkv_bias)
     if spec.moe:
-        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, max(mesh_ctx().tp, 1))
+        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, mesh_ctx().tp)
         p["norm2"] = norm_init(cfg.norm, cfg.d_model, dtype)
         p["moe"] = moe_mod.moe_init(ks[2], dims, dtype)
         if cfg.moe.n_shared_experts:
@@ -334,7 +335,7 @@ def embed_lookup(table, tokens):
 
     dp_ok = tokens.shape[0] % ctx.dp == 0
     bspec = ctx.dp_axes if dp_ok else None
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(tp_ax, None), P(bspec, None)),
         out_specs=P(bspec, None, None),
@@ -435,7 +436,7 @@ def _attn_layer_full(p, x, spec: LayerSpec, cfg: ModelConfig, layout,
     aux = jnp.zeros((), jnp.float32)
     if spec.moe:
         h2 = apply_norm(cfg.norm, p["norm2"], x)
-        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, max(mesh_ctx().tp, 1))
+        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, mesh_ctx().tp)
         y, aux = moe_mod.moe_apply(p["moe"], h2, dims)
         if "shared_mlp" in p:
             g = jax.nn.sigmoid(
@@ -511,7 +512,7 @@ def _attn_layer_decode(p, x, spec: LayerSpec, cfg: ModelConfig, layout,
     aux = jnp.zeros((), jnp.float32)
     if spec.moe:
         h2 = apply_norm(cfg.norm, p["norm2"], x)
-        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, max(mesh_ctx().tp, 1))
+        dims = moe_mod.moe_dims(cfg.moe, cfg.d_model, mesh_ctx().tp)
         y, aux = moe_mod.moe_apply(p["moe"], h2, dims)
         if "shared_mlp" in p:
             g = jax.nn.sigmoid(
@@ -841,7 +842,7 @@ def _entry_axes(spec: LayerSpec, cfg: ModelConfig, layout):
         if dims.version == 1:
             return {"conv": ("dp", None, "tp"), "ssm": ("dp", "tp", None)}
         return {"conv": ("dp", None, "tp"), "ssm": ("dp", "tp", None, None)}
-    tp = max(mesh_ctx().tp, 1)
+    tp = mesh_ctx().tp
     kv_ax = "tp" if layout is not None and layout.kv_store % tp == 0 else None
     seq_ax = None if kv_ax == "tp" else "tp"   # seq-shard when heads can't
     e = {"k": ("dp", seq_ax, kv_ax, None), "v": ("dp", seq_ax, kv_ax, None)}

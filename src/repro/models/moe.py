@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MoEConfig
-from repro.dist.sharding import current as mesh_ctx, pad_to_multiple
+from repro.dist.sharding import current as mesh_ctx, pad_to_multiple, shard_map
 from repro.models.layers import dense_init
 
 
@@ -42,9 +42,11 @@ class MoEDims:
 
 
 def moe_dims(cfg: MoEConfig, d_model: int, ep: int) -> MoEDims:
+    """``ep`` is the expert-parallel degree (the mesh context's ``tp``,
+    which the context guarantees is ``>= 1``)."""
     return MoEDims(
         n_experts=cfg.n_experts,
-        e_pad=pad_to_multiple(cfg.n_experts, max(ep, 1)),
+        e_pad=pad_to_multiple(cfg.n_experts, ep),
         top_k=cfg.top_k,
         d_model=d_model,
         d_ff=cfg.d_ff_expert,
@@ -216,7 +218,7 @@ def moe_apply(params, x, dims: MoEDims) -> Tuple[jnp.ndarray, jnp.ndarray]:
     body = _moe_a2a_body if seq_shardable else _moe_replicated_body
     xspec = P(bspec, tp_ax if seq_shardable else None, None)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(body, dims=dims, axis_names=tuple(mesh.axis_names)),
         mesh=mesh,
         in_specs=(router_spec, w_spec, w_spec, w_spec, xspec),

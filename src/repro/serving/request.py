@@ -30,6 +30,7 @@ class Request:
     prompt_tokens: Optional[List[int]] = None
     prefilled: int = 0             # prompt tokens already prefilled
     generated: List[int] = dataclasses.field(default_factory=list)
+    kv_allocated: int = 0          # KV slots charged by the scheduler
 
     # timeline (perf_counter seconds)
     t_arrival: float = 0.0

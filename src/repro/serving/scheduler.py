@@ -113,9 +113,24 @@ class Scheduler:
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
+    # -- KV accounting -------------------------------------------------------
+    # Allocation and free are symmetric by construction: every kv_used
+    # increment is charged to the request (``kv_allocated``) and release
+    # refunds exactly that.  Computing the free side from n_prompt/generated
+    # would overcount prefix-cache hits (never allocated) and the first
+    # post-prefill token (charged as prefill, not decode).
+
+    def _alloc_kv(self, req: Request, n: int) -> None:
+        req.kv_allocated += n
+        self.kv_used += n
+
+    def _free_kv(self, req: Request) -> None:
+        self.kv_used -= req.kv_allocated
+        req.kv_allocated = 0
+
     def _finish(self, req: Request) -> None:
         req.state = RequestState.FINISHED
-        self.kv_used -= req.n_prompt + len(req.generated)
+        self._free_kv(req)
         self.running.remove(req)
 
     def expire(self, now: float, timeout: float) -> List[Request]:
@@ -131,7 +146,7 @@ class Scheduler:
         for req in list(self.running):
             if not req.t_first_token and now - req.t_arrival > timeout:
                 req.state = RequestState.TIMED_OUT
-                self.kv_used -= req.prefilled + len(req.generated)
+                self._free_kv(req)
                 self.running.remove(req)
                 dead.append(req)
         return dead
@@ -149,7 +164,7 @@ class Scheduler:
             if req.state == RequestState.DECODING and budget > 0:
                 plan.decode.append(req.req_id)
                 budget -= 1
-                self.kv_used += 1
+                self._alloc_kv(req, 1)
 
         # 2. continue chunked prefills of running requests
         for req in self.running:
@@ -159,7 +174,7 @@ class Scheduler:
                     plan.prefill.append((req.req_id, req.prefilled, n))
                     req.prefilled += n
                     budget -= n
-                    self.kv_used += n
+                    self._alloc_kv(req, n)
                 if req.prefill_remaining == 0:
                     req.state = RequestState.DECODING
 
@@ -177,7 +192,7 @@ class Scheduler:
             plan.prefill.append((req.req_id, req.prefilled, n))
             req.prefilled += n
             budget -= n
-            self.kv_used += n
+            self._alloc_kv(req, n)
             if req.prefill_remaining == 0:
                 req.state = RequestState.DECODING
 

@@ -47,13 +47,25 @@ class TokenizerPool:
             return [self._encode_one(t) for t in texts]
         return list(self._pool.map(self._encode_one, texts))
 
-    def submit(self, text: str) -> "cf.Future[List[int]]":
-        """Async single-request encode (API-server request path)."""
+    def submit(self, fn: Callable, *args) -> "cf.Future":
+        """Run ``fn(*args)`` on the pool (synchronously when pool_width==1).
+
+        The public async entry point for API-server work that must share the
+        tokenizer threads (the contention the paper measures) — callers never
+        touch the executor directly.
+        """
         if self._pool is None:
             f: cf.Future = cf.Future()
-            f.set_result(self._encode_one(text))
+            try:
+                f.set_result(fn(*args))
+            except BaseException as e:  # mirror executor future semantics
+                f.set_exception(e)
             return f
-        return self._pool.submit(self._encode_one, text)
+        return self._pool.submit(fn, *args)
+
+    def submit_encode(self, text: str) -> "cf.Future[List[int]]":
+        """Async single-request encode (API-server request path)."""
+        return self.submit(self._encode_one, text)
 
     def throughput_tokens_per_s(self) -> Optional[float]:
         with self._lock:

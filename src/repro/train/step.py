@@ -24,7 +24,7 @@ def pick_n_micro(cfg: ModelConfig, global_batch: int, seq_len: int,
                  budget_bytes: float = 256e6, cap: int = 8) -> int:
     """Smallest power-of-two microbatch count keeping the per-device
     residual-stream slab under ``budget_bytes``."""
-    dp = max(mesh_ctx().dp, 1)
+    dp = mesh_ctx().dp
     per_dev = max(global_batch // dp, 1)
     slab = per_dev * seq_len * cfg.d_model * 2  # bf16
     n = 1

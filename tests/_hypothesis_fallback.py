@@ -1,0 +1,89 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo runs in does not ship hypothesis and nothing may
+be pip-installed, so the property tests fall back to a seeded pseudo-random
+sweep: ``@given`` re-runs the test body ``max_examples`` times with values
+drawn from a fixed-seed ``random.Random``, which keeps the properties
+exercised (and reproducible) without shrinking or the database.
+
+Only the strategy surface the test suite uses is implemented:
+``integers``, ``lists``, ``text``.
+"""
+from __future__ import annotations
+
+import random
+import types
+from typing import Callable, Optional
+
+_SEED = 0xC0FFEE
+_DEFAULT_MAX_EXAMPLES = 25
+
+# codepoint ranges for alphabet-less text(): printable ASCII, latin-1
+# supplement, greek, CJK, emoji — surrogate-free so str stays valid UTF-8
+_UNICODE_RANGES = (
+    (0x20, 0x7E), (0xA1, 0xFF), (0x391, 0x3C9),
+    (0x4E00, 0x4FFF), (0x1F300, 0x1F5FF),
+)
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], object]):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(r: random.Random):
+        n = r.randint(min_size, max_size)
+        return [elements.draw(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def text(alphabet: Optional[str] = None, min_size: int = 0,
+         max_size: int = 100) -> _Strategy:
+    def one_char(r: random.Random) -> str:
+        if alphabet is not None:
+            return r.choice(alphabet)
+        lo, hi = r.choice(_UNICODE_RANGES)
+        return chr(r.randint(lo, hi))
+
+    def draw(r: random.Random):
+        n = r.randint(min_size, max_size)
+        return "".join(one_char(r) for _ in range(n))
+    return _Strategy(draw)
+
+
+def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
+    def decorate(fn):
+        # plain *args/**kwargs signature (no functools.wraps: pytest must
+        # not see the wrapped function's parameters as fixture requests)
+        def property_runner(*args, **kwargs):
+            n = getattr(property_runner, "_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(_SEED)
+            for _ in range(n):
+                drawn = [s.draw(rnd) for s in arg_strats]
+                drawn_kw = {k: s.draw(rnd) for k, s in kw_strats.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+        property_runner.__name__ = fn.__name__
+        property_runner.__doc__ = fn.__doc__
+        property_runner.__module__ = fn.__module__
+        return property_runner
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate
+
+
+strategies = types.SimpleNamespace(integers=integers, lists=lists, text=text)

@@ -111,6 +111,39 @@ def test_step_plan_roundtrip():
     assert q.n_tokens == 128 + 64 + 2
 
 
+def test_async_lookahead_engine_end_to_end():
+    """Async lookahead scheduling (EngineConfig(async_sched=True)): the
+    EngineCore overlaps scheduling/broadcast of step k+1 with device
+    execution of step k.  Every request must still complete with the full
+    token count, in-flight steps must drain at shutdown, and both engine
+    and worker stats must be produced."""
+    cfg = EngineConfig(
+        tp_degree=2, pool_width=2,
+        device=DeviceModel(t_fixed=1e-4, t_prefill_tok=1e-7,
+                           t_decode_seq=1e-5),
+        yield_every=64,
+        async_sched=True,
+    )
+    sys_ = ServingSystem(cfg).start()
+    try:
+        n = 10
+        for i in range(n):
+            sys_.submit(f"prompt number {i} " * (3 + i % 4),
+                        max_new_tokens=5)
+        results = sys_.collect(n, timeout=60.0)
+        assert len(results) == n, f"only {len(results)}/{n} completed"
+        for rec in results.values():
+            assert rec["n_generated"] == 5
+            assert rec["t_done"] >= rec["t_first_token"] > rec["t_arrival"]
+    finally:
+        stats = sys_.shutdown()
+    roles = {s["role"] for s in stats}
+    assert roles >= {"engine", "worker0", "worker1"}, roles
+    eng = next(s for s in stats if s["role"] == "engine")
+    assert eng["sched_cost"], "scheduler cost must be measured"
+    assert eng["barrier_wall"], "lookahead barrier waits must be measured"
+
+
 @pytest.mark.parametrize("async_sched", [False, True])
 def test_engine_end_to_end(async_sched):
     """Full pipeline: submit -> tokenize -> schedule -> broadcast -> worker

@@ -2,7 +2,11 @@
 from __future__ import annotations
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container ships no hypothesis — deterministic sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -64,6 +68,47 @@ def test_prefix_cache_skips_shared_prefill():
     sched.add_request(b)
     assert b.prefilled >= 512 - 64 - 1  # all but the tail skipped
     assert a.prefilled == 0
+
+
+def test_kv_accounting_symmetric_with_prefix_cache():
+    """kv_used must return to 0 after prefix-cached requests drain.
+
+    Regression: ``_finish`` used to free ``n_prompt + generated`` while a
+    cached request only ever allocated ``n_prompt - cached_hit + generated``,
+    driving kv_used negative (and eventually blocking admission when the
+    asymmetry pointed the other way).
+    """
+    sched = Scheduler(SchedulerConfig(enable_prefix_cache=True))
+    a = _req(512, max_new=3, stream=9)
+    sched.add_request(a)
+    drain(sched)
+    assert a.state == RequestState.FINISHED and sched.kv_used == 0
+
+    b = _req(512, max_new=3, stream=9)      # identical prompt -> cache hit
+    sched.add_request(b)
+    assert b.prefilled > 0                  # the hit actually skipped work
+    drain(sched)
+    assert b.state == RequestState.FINISHED
+    assert sched.kv_used == 0
+    assert b.kv_allocated == 0
+
+
+def test_kv_accounting_symmetric_on_timeout():
+    """kv_used returns to 0 when a running (partially prefilled) request
+    times out mid-flight."""
+    cfg = SchedulerConfig(max_tokens_per_step=64, prefill_chunk=64,
+                          enable_prefix_cache=False)
+    sched = Scheduler(cfg)
+    r = _req(640, max_new=2, stream=3)
+    r.t_arrival = 0.0
+    sched.add_request(r)
+    plan = sched.schedule()                 # admits + prefills one chunk
+    assert plan is not None and sched.kv_used == 64
+    sched.complete_step(plan, 1.0)
+    dead = sched.expire(now=300.0, timeout=200.0)
+    assert dead == [r] and r.state == RequestState.TIMED_OUT
+    assert sched.kv_used == 0 and r.kv_allocated == 0
+    assert not sched.has_work
 
 
 def test_expiry_releases_queue():

@@ -4,7 +4,11 @@ from __future__ import annotations
 import string
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container ships no hypothesis — deterministic sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.tokenizer.bpe import BPETokenizer, default_tokenizer, train_bpe
 from repro.tokenizer.pool import TokenizerPool
@@ -73,6 +77,23 @@ def test_train_produces_useful_merges():
     tok = train_bpe(["aaa bbb aaa bbb aaa bbb"] * 10, n_merges=10)
     assert len(tok.merges) > 0
     assert tok.decode(tok.encode("aaa bbb")) == "aaa bbb"
+
+
+@pytest.mark.parametrize("width", [1, 4])
+def test_pool_submit_runs_callables(tok, width):
+    """submit(fn) is the public async entry point — works sync (width 1)
+    and threaded, and propagates exceptions through the future."""
+    pool = TokenizerPool(tok, pool_width=width)
+    try:
+        f = pool.submit(lambda a, b: a + b, 2, 3)
+        assert f.result(timeout=10.0) == 5
+        g = pool.submit_encode("hello world")
+        assert g.result(timeout=10.0) == tok.encode("hello world")
+        boom = pool.submit(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            boom.result(timeout=10.0)
+    finally:
+        pool.shutdown()
 
 
 def test_pool_parallel_matches_serial(tok):
