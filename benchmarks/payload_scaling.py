@@ -1,0 +1,72 @@
+"""Broadcast payload size + serialize cost vs. decode batch size.
+
+The paper's §V-B: every step the EngineCore serializes the schedule and
+pushes it through the shm ring.  With paged KV the plan carries each
+request's block table, so the payload — and the CPU burned serializing
+it — grows with the batch and with context length.  This measures both
+on the real ``StepPlan`` encoder.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def _decode_plan(batch: int, ctx_tokens: int, block_size: int = 64):
+    """A steady-state decode step for ``batch`` requests of ``ctx_tokens``."""
+    cfg = SchedulerConfig(max_num_seqs=batch, max_tokens_per_step=1 << 20,
+                          prefill_chunk=1 << 20, enable_prefix_cache=False,
+                          block_size=block_size,
+                          kv_capacity_tokens=2 * batch * (ctx_tokens + 64))
+    sched = Scheduler(cfg)
+    for i in range(batch):
+        r = Request(text="", max_new_tokens=4)
+        base = (i + 1) << 20
+        r.prompt_tokens = list(range(base, base + ctx_tokens))
+        sched.add_request(r)
+    plan = sched.schedule()              # prefill everything
+    sched.complete_step(plan, 1.0)
+    return sched.schedule()              # the decode-only step
+
+
+def run(write: bool = True) -> list:
+    rows = []
+    for ctx in (512, 2048):
+        for batch in (1, 8, 32, 64):
+            plan = _decode_plan(batch, ctx)
+            assert plan is not None and len(plan.decode) == batch
+            t0 = time.perf_counter()
+            n_iter = 20
+            for _ in range(n_iter):
+                plan._raw = None         # force re-serialization
+                plan.encode()
+            dt = (time.perf_counter() - t0) / n_iter
+            rows.append({
+                "ctx_tokens": ctx, "batch": batch,
+                "payload_bytes": plan.payload_bytes,
+                "approx_bytes": plan.approx_payload_bytes(),
+                "serialize_us": round(dt * 1e6, 1),
+            })
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "payload_scaling.json").write_text(
+            json.dumps(rows, indent=1))
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print("ctx_tokens,batch,payload_bytes,serialize_us")
+    for r in rows:
+        print(f"{r['ctx_tokens']},{r['batch']},{r['payload_bytes']},"
+              f"{r['serialize_us']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -46,6 +46,10 @@ def main() -> None:
     _section("fig13: shm broadcast dequeue contention (real + sim)")
     fig13_shm_dequeue.main()
 
+    from benchmarks import payload_scaling
+    _section("payload: broadcast size + serialize cost vs batch (paged KV)")
+    payload_scaling.main()
+
     from benchmarks import fig34_cluster_cdf
     _section("fig3-4: cluster allocation CDFs (synthetic, paper-matched)")
     fig34_cluster_cdf.main()

@@ -34,6 +34,7 @@ def run_once(attackers: int, label: str) -> dict:
         vid = sys_.submit(victim_text, max_new_tokens=4, is_victim=True)
         results = sys_.collect(attackers + 1, timeout=120.0)
         victim = results[vid]
+        assert not victim.get("timed_out"), "victim timed out under load"
     finally:
         stats = sys_.shutdown()
     dq = [w for s in stats if s["role"].startswith("worker")

@@ -1,0 +1,37 @@
+"""Pluggable execution backends: plan in, StepResult out.
+
+``make_backend`` is the single construction seam used by the engine
+workers and the launch drivers; ``JaxBackend`` is imported lazily so the
+default emulated path never pulls jax into forked worker processes.
+"""
+from __future__ import annotations
+
+from repro.backend.base import Backend, StepResult
+from repro.backend.emulated import EmulatedBackend
+
+__all__ = ["Backend", "EmulatedBackend", "JaxBackend", "StepResult",
+           "make_backend"]
+
+
+def __getattr__(name):
+    if name == "JaxBackend":
+        from repro.backend.jax_backend import JaxBackend
+        return JaxBackend
+    raise AttributeError(name)
+
+
+def make_backend(name: str, *, device=None, scheduler_cfg=None):
+    """Build a backend by name ("emulated" | "jax").
+
+    ``device`` feeds the emulated sleep model; ``scheduler_cfg`` sizes the
+    jax page pool (its block ids must match the scheduler's manager)."""
+    if name == "emulated":
+        from repro.core.devmodel import DeviceModel
+        return EmulatedBackend(device if device is not None else DeviceModel())
+    if name == "jax":
+        from repro.backend.jax_backend import JaxBackend
+        from repro.serving.scheduler import SchedulerConfig
+        cfg = scheduler_cfg if scheduler_cfg is not None else SchedulerConfig()
+        return JaxBackend(block_size=cfg.block_size,
+                          num_blocks=cfg.num_kv_blocks)
+    raise ValueError(f"unknown backend {name!r} (want 'emulated' or 'jax')")

@@ -1,0 +1,42 @@
+"""Pluggable execution backends for the serving stack.
+
+The scheduler emits ``StepPlan``s; a ``Backend`` turns one plan into one
+device step.  The seed hard-coded ``time.sleep(dev.step_time(plan))`` in
+every consumer — the engine workers, the DES serving model, the launch
+drivers — so the pallas kernels were dead code from the serving stack's
+point of view.  Backends make execution a seam: ``EmulatedBackend`` keeps
+the calibrated-sleep device model (the paper's measurement instrument);
+``JaxBackend`` runs real batched decode through the paged pallas kernel
+against a block-indexed cache.  This is also the layer the heterogeneous
+CPU/GPU execution directions (arXiv:2504.11750) plug into.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, runtime_checkable
+
+from repro.serving.scheduler import StepPlan
+
+
+@dataclasses.dataclass
+class StepResult:
+    """What one executed step hands back to the scheduler."""
+    step_id: int
+    tokens: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # req_id -> sampled token (decode reqs + requests finishing prefill)
+    wall_s: float = 0.0
+
+
+@runtime_checkable
+class Backend(Protocol):
+    def step_cost(self, plan: StepPlan) -> float:
+        """Predicted device seconds for ``plan`` (virtual-time consumers —
+        the DES — charge this instead of calling execute)."""
+        ...
+
+    def execute(self, plan: StepPlan,
+                block_tables: Optional[Dict[int, List[int]]] = None
+                ) -> StepResult:
+        """Run one step.  ``block_tables`` overrides ``plan.block_tables``
+        (they normally travel inside the plan)."""
+        ...

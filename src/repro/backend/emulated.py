@@ -1,0 +1,41 @@
+"""Emulated backend: the calibrated sleep that stands in for the device.
+
+This preserves the seed's measurement methodology — everything host-side
+is real, the accelerator step is a roofline-derived ``time.sleep`` — but
+behind the Backend seam, and with the device model now charged for the
+per-step control metadata too: uploading/consuming the block tables is
+per-entry work on a real worker, so bigger batches cost more than the
+three-coefficient model admitted.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.backend.base import StepResult
+from repro.core.devmodel import DeviceModel
+from repro.serving.scheduler import StepPlan
+
+
+class EmulatedBackend:
+    def __init__(self, device: DeviceModel = DeviceModel(), *,
+                 sleep: bool = True):
+        self.device = device
+        self.sleep = sleep          # False: account cost without wall time
+
+    def step_cost(self, plan: StepPlan) -> float:
+        return self.device.step_time(plan)
+
+    def execute(self, plan: StepPlan,
+                block_tables: Optional[Dict[int, List[int]]] = None
+                ) -> StepResult:
+        t = self.step_cost(plan)
+        if self.sleep:
+            time.sleep(t)
+        # placeholder sampling: token 0 for every scheduled request (the
+        # emulated device computes nothing — counts/order still exercise
+        # the full control plane)
+        tokens = {rid: 0 for rid in plan.decode}
+        for rid, _, _ in plan.prefill:
+            tokens[rid] = 0
+        return StepResult(step_id=plan.step_id, tokens=tokens, wall_s=t)

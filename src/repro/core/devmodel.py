@@ -6,6 +6,12 @@ coefficients are derived from the dry-run roofline terms — so control-plane
 experiments see realistic device-step durations per architecture.
 
 step_time = t_fixed + prefill_tokens * t_prefill_tok + n_decode * t_decode_seq
+          + block_table_entries * t_block_entry
+
+The block-table term models the per-step metadata upload PagedAttention
+adds: every entry of every scheduled request's table is consumed by the
+device each step, so batch growth costs more than the three-coefficient
+seed model admitted.
 """
 from __future__ import annotations
 
@@ -19,12 +25,15 @@ class DeviceModel:
     t_fixed: float = 2e-3           # dispatch + collective latency floor
     t_prefill_tok: float = 2e-6     # per prefill token
     t_decode_seq: float = 1e-4      # per decoding sequence
+    t_block_entry: float = 2e-8     # per KV block-table entry in the plan
     max_step: float = 1.0
 
     def step_time(self, plan: StepPlan) -> float:
         pre = sum(l for _, _, l in plan.prefill)
+        n_entries = sum(len(t) for t in plan.block_tables.values())
         t = (self.t_fixed + pre * self.t_prefill_tok
-             + len(plan.decode) * self.t_decode_seq)
+             + len(plan.decode) * self.t_decode_seq
+             + n_entries * self.t_block_entry)
         return min(t, self.max_step)
 
     @classmethod

@@ -15,6 +15,7 @@ This is the instrumented system the paper's experiments (Figs 5-13) run on.
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import dataclasses
 import multiprocessing as mp
 import os
@@ -39,13 +40,40 @@ class EngineConfig:
     pool_width: int = 4                     # tokenizer threads
     scheduler: SchedulerConfig = SchedulerConfig()
     device: DeviceModel = DeviceModel()
+    backend: str = "emulated"               # worker executor (repro.backend)
     ring_slots: int = 8
-    ring_slot_bytes: int = 1 << 16
+    # 0 = auto-size from the scheduler config: plans carry block tables +
+    # input ids, so a slot must hold max_tokens_per_step input ids plus the
+    # batch's table entries (disjoint tables are bounded by the pool size;
+    # heavy prefix sharing can exceed the bound — raise this explicitly
+    # for workloads where many long requests share one prefix)
+    ring_slot_bytes: int = 0
     yield_every: int = 0                    # 0 = pure busy-wait (vLLM-style)
     request_timeout: float = 200.0          # the paper's timeout bound
     # async lookahead scheduling (beyond-paper mitigation, §V-B takeaway):
     # overlap scheduling/broadcast of step k+1 with device execution of k.
     async_sched: bool = False
+
+    def resolved_ring_slot_bytes(self) -> int:
+        if self.ring_slot_bytes:
+            return self.ring_slot_bytes
+        s = self.scheduler
+        # per-plan table entries are bounded by the pool size (disjoint
+        # tables) AND by what max_num_seqs requests can reference (4096
+        # blocks/seq covers a 256K-token context at the default block size)
+        entries = min(s.num_kv_blocks, 4096 * s.max_num_seqs)
+        est = (4096 + 10 * s.max_tokens_per_step
+               + 9 * (entries + 16 * s.max_num_seqs))
+        size = 1 << 16
+        while size < est:
+            size *= 2
+        if size > 1 << 22:
+            raise ValueError(
+                f"auto-sized ring slot ({size} B) exceeds the 4 MiB sanity "
+                f"cap for this scheduler config (num_kv_blocks="
+                f"{s.num_kv_blocks}, max_num_seqs={s.max_num_seqs}); set "
+                f"EngineConfig.ring_slot_bytes explicitly")
+        return size
 
 
 def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
@@ -58,7 +86,29 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
     reqs: Dict[int, Request] = {}
     sched_costs: List[float] = []
     barrier_waits: List[float] = []
+    payload_sizes: List[int] = []
     pending_plan: Optional[StepPlan] = None   # async_sched in-flight step
+
+    def emit(req: Request, timed_out: bool = False) -> None:
+        out_q.put({
+            "req_id": req.req_id, "is_victim": req.is_victim,
+            "t_arrival": req.t_arrival,
+            "t_tokenize_start": req.t_tokenize_start,
+            "t_tokenize_done": req.t_tokenize_done,
+            "t_first_token": req.t_first_token,
+            "t_done": req.t_done,
+            "n_prompt": req.n_prompt,
+            "n_generated": len(req.generated),
+            "timed_out": timed_out,
+        })
+        reqs.pop(req.req_id, None)
+
+    def expire_requests() -> None:
+        # the live loop enforces the client timeout too (the seed only
+        # ever called sched.expire in the DES), so collect() can't hang
+        # waiting on requests that will never finish
+        for req in sched.expire(time.perf_counter(), cfg.request_timeout):
+            emit(req, timed_out=True)
 
     def drain_inputs() -> None:
         while True:
@@ -75,6 +125,8 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
             req.t_tokenize_done = item["t_tokenize_done"]
             reqs[req.req_id] = req
             sched.add_request(req)
+            if req.state == RequestState.TIMED_OUT:
+                emit(req, timed_out=True)    # rejected: can never fit KV
 
     def finish_step(plan: StepPlan) -> None:
         barrier = board.wait_all(plan.step_id,
@@ -82,25 +134,19 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
         barrier_waits.append(barrier.wall_s)
         now = time.perf_counter()
         for req in sched.complete_step(plan, now):
-            out_q.put({
-                "req_id": req.req_id, "is_victim": req.is_victim,
-                "t_arrival": req.t_arrival,
-                "t_tokenize_start": req.t_tokenize_start,
-                "t_tokenize_done": req.t_tokenize_done,
-                "t_first_token": req.t_first_token,
-                "t_done": req.t_done,
-                "n_prompt": req.n_prompt,
-                "n_generated": len(req.generated),
-            })
+            emit(req)
 
     while not (stop_ev.is_set() and not sched.has_work
                and pending_plan is None):
         drain_inputs()
+        expire_requests()
         t0 = time.perf_counter()
         plan = sched.schedule()
         sched_costs.append(time.perf_counter() - t0)
         if plan is not None:
-            writer.enqueue(plan.encode(), yield_every=cfg.yield_every)
+            raw = plan.encode()
+            payload_sizes.append(len(raw))
+            writer.enqueue(raw, yield_every=cfg.yield_every)
         if cfg.async_sched:
             # lookahead pipeline: wait for the PREVIOUS step while the
             # workers already received (and execute) the current one.
@@ -125,6 +171,7 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
         "enqueue_spins": [s.spins for s in writer.stats],
         "sched_cost": sched_costs,
         "barrier_wall": barrier_waits,
+        "payload_bytes": payload_sizes,
     })
     ring.close()
     board.close()
@@ -132,18 +179,25 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
 
 def _worker(cfg: EngineConfig, idx: int, ring_name: str, board_name: str,
             stats_q) -> None:
-    """Per-device worker process: dequeue plan -> 'compute' -> barrier mark."""
+    """Per-device worker process: dequeue plan -> execute -> barrier mark.
+
+    Execution goes through the pluggable backend seam: "emulated" keeps
+    the calibrated device-model sleep, "jax" runs the paged pallas decode
+    for real (constructed post-fork, so jax state is never inherited)."""
+    from repro.backend import make_backend   # deferred: avoids core<->backend
+                                             # import cycle at package load
     ring = ShmBroadcastQueue.attach(ring_name)
     reader = ring.reader(idx)
     board = CompletionBoard.attach(board_name, cfg.tp_degree)
-    dev = cfg.device
+    backend = make_backend(cfg.backend, device=cfg.device,
+                           scheduler_cfg=cfg.scheduler)
     while True:
         payload, _ = reader.dequeue(timeout=600.0,
                                     yield_every=cfg.yield_every)
         plan = StepPlan.decode_bytes(payload)
         if plan.step_id < 0:
             break
-        time.sleep(dev.step_time(plan))   # accelerator executes
+        backend.execute(plan)             # accelerator executes
         board.mark(idx, plan.step_id)
     stats_q.put({
         "role": f"worker{idx}",
@@ -162,7 +216,7 @@ class ServingSystem:
         self.cfg = cfg
         self.tokenizer = tokenizer or default_tokenizer()
         self.ring = ShmBroadcastQueue.create(
-            cfg.tp_degree, cfg.ring_slots, cfg.ring_slot_bytes)
+            cfg.tp_degree, cfg.ring_slots, cfg.resolved_ring_slot_bytes())
         self.board = CompletionBoard.create(cfg.tp_degree)
         self.in_q = _CTX.Queue()
         self.out_q = _CTX.Queue()
@@ -174,6 +228,7 @@ class ServingSystem:
         self.stats: List[dict] = []
         self._next_id = 0
         self._lock = threading.Lock()
+        self._encode_futs: List["cf.Future"] = []
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -219,8 +274,16 @@ class ServingSystem:
 
         if self.pool is not None:
             fut = self.pool.submit(tokenize_and_enqueue)
-            if fut.done():
-                fut.result()   # pool_width==1 runs inline: propagate errors
+            if self.pool.pool_width == 1:
+                fut.result()   # ran inline: propagate errors immediately
+            else:
+                # retain the future: encode exceptions on pool threads must
+                # not vanish silently — shutdown() re-raises the first one
+                with self._lock:
+                    self._encode_futs = [
+                        f for f in self._encode_futs
+                        if not f.done() or f.exception() is not None]
+                    self._encode_futs.append(fut)
         else:
             tokenize_and_enqueue()
         return rid
@@ -252,4 +315,14 @@ class ServingSystem:
             self.pool.shutdown()
         self.ring.close()
         self.board.close()
+        # surface the first tokenizer-pool encode failure (after cleanup,
+        # so a bad request can't leak processes or shm segments); in-flight
+        # encodes still drain on the pool threads, so wait for them first
+        with self._lock:
+            futs, self._encode_futs = self._encode_futs, []
+        if futs:
+            cf.wait(futs, timeout=5.0)
+        for fut in futs:
+            if fut.done() and fut.exception() is not None:
+                raise fut.exception()
         return self.stats

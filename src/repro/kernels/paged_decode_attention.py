@@ -1,0 +1,130 @@
+"""Pallas TPU paged decode attention over a block-indexed KV cache.
+
+The paged variant of ``kernels/decode_attention``: instead of one
+contiguous ``[B, KV, S, D]`` cache per batch, KV lives in a shared pool of
+fixed-size pages ``[KV, N_blocks, block, D]`` and each sequence addresses
+its pages through a block table (``repro.serving.blocks`` hands out the
+ids; ``repro.backend.JaxBackend`` owns the pool).  This is the kernel-side
+half of PagedAttention: the gather happens *inside* the kernel from the
+block table, so sequences can share prefix pages and nothing is
+recompacted between steps.
+
+One new query token per sequence attends its ``seq_len`` cached slots.
+Grid: ``(B, KV)`` — one program per (sequence, kv-head); the kernel walks
+the sequence's block table with a ``fori_loop``, streaming one
+``[block, D]`` page per iteration through an online-softmax carry (the
+flash-decoding recurrence).  GQA group r = H/KV: the query heads of one kv
+head form the rows of an ``[r, block]`` MXU tile.
+
+Demo-scale note: the page pool is mapped whole into VMEM, which is honest
+for the CPU-interpret serving backend this repo runs (and for small pools
+on real TPUs); a production HBM-resident pool would DMA pages in with
+``make_async_copy`` double-buffering instead — same loop structure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref, *,
+            block: int, nb_max: int, scale: float):
+    q = q_ref[0]                                      # [r, D]
+    seq_len = len_ref[0]
+    r, d = q.shape
+    offs = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        blk = tbl_ref[0, j]
+        page = jnp.maximum(blk, 0)                    # pad entries are -1
+        k = k_ref[0, pl.ds(page, 1)][0]               # [block, D]
+        v = v_ref[0, pl.ds(page, 1)][0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [r, block]
+        pos = j * block + offs                        # [1, block]
+        valid = (pos < seq_len) & (blk >= 0)
+        s = jnp.where(valid, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = (acc * alpha[:, None]
+               + jax.lax.dot_general(
+                   p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                   preferred_element_type=jnp.float32))
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((r,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((r,), jnp.float32)
+    acc0 = jnp.zeros((r, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nb_max, body, (m0, l0, acc0))
+    safe = jnp.where(l == 0.0, 1.0, l)                # fully-masked rows
+    o_ref[0] = (acc / safe[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           interpret: bool = False):
+    """q: [B, H, D]; k/v_pages: [KV, N_blocks, block, D];
+    block_tables: [B, nb_max] i32 page ids (-1 = padding);
+    seq_lens: [B] i32 valid cache length per sequence (0 = inert row).
+    Returns [B, H, D]."""
+    B, H, D = q.shape
+    KV, N, block, _ = k_pages.shape
+    assert H % KV == 0
+    r = H // KV
+    nb_max = block_tables.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, KV, r, D).reshape(B * KV, r, D)
+
+    kernel = functools.partial(_kernel, block=block, nb_max=nb_max,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, g: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, nb_max), lambda b, g: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, r, D), lambda b, g: (b * KV + g, 0, 0)),
+            pl.BlockSpec((1, N, block, D), lambda b, g: (g, 0, 0, 0)),
+            pl.BlockSpec((1, N, block, D), lambda b, g: (g, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r, D), lambda b, g: (b * KV + g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, r, D), q.dtype),
+        interpret=interpret,
+    )(seq_lens, block_tables, qg, k_pages, v_pages)
+    return out.reshape(B, H, D)
+
+
+def paged_decode_attention_reference(q, k_pages, v_pages, block_tables,
+                                     seq_lens):
+    """Gather-then-softmax reference (jnp only) for conformance tests."""
+    B, H, D = q.shape
+    KV, N, block, _ = k_pages.shape
+    r = H // KV
+    nb_max = block_tables.shape[1]
+    pages = jnp.clip(block_tables, 0, N - 1)              # [B, nb]
+    k = jnp.take(k_pages, pages, axis=1)                  # [KV, B, nb, blk, D]
+    v = jnp.take(v_pages, pages, axis=1)
+    k = jnp.moveaxis(k, 1, 0).reshape(B, KV, nb_max * block, D)
+    v = jnp.moveaxis(v, 1, 0).reshape(B, KV, nb_max * block, D)
+    qg = q.reshape(B, KV, r, D)
+    s = jnp.einsum("bgrd,bgsd->bgrs", qg, k) / (D ** 0.5)
+    pos = jnp.arange(nb_max * block)[None, :]
+    valid = (pos < seq_lens[:, None]) & jnp.repeat(
+        block_tables >= 0, block, axis=1)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    # softmax that tolerates fully-masked (seq_len == 0) rows
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bgrs,bgsd->bgrd", p / jnp.where(l == 0, 1.0, l), v)
+    return out.reshape(B, H, D).astype(q.dtype)

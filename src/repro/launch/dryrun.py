@@ -286,6 +286,47 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
     return rec
 
 
+def emit_devmodel(arch: str, out_dir: Path = ARTIFACTS,
+                  prefill_cell: str = "prefill_32k",
+                  decode_cell: str = "decode_32k") -> dict:
+    """Calibrate the serving stack's emulated backend from dry-run cells.
+
+    Reads the prefill + decode artifacts this driver already writes,
+    derives the roofline-bound step seconds, and emits the DeviceModel
+    coefficients that ``repro.backend.EmulatedBackend`` (and
+    ``repro.launch.serve --devmodel``) consume — the dry-run compiler is
+    thereby the calibration source for the execution backend, not a
+    disconnected artifact.
+    """
+    import dataclasses as dc
+
+    from repro.core.devmodel import DeviceModel
+
+    def bound_s(cell_name: str) -> float:
+        path = out_dir / f"pod_16x16__{arch}__{cell_name}.json"
+        if not path.exists():
+            raise SystemExit(
+                f"missing {path}; run: python -m repro.launch.dryrun "
+                f"--arch {arch} --cell {cell_name}")
+        rec = json.loads(path.read_text())
+        if rec.get("status") != "ok":
+            raise SystemExit(f"{path} is status={rec.get('status')}")
+        t = rec["roofline"]
+        return max(t["compute_s"], t.get("memory_s_tpu_est", 0.0),
+                   t["collective_s"])
+
+    pre, dec = CELLS_BY_NAME[prefill_cell], CELLS_BY_NAME[decode_cell]
+    dm = DeviceModel.from_roofline(
+        bound_s(prefill_cell), pre.global_batch * pre.seq_len,
+        bound_s(decode_cell), dec.global_batch)
+    rec = {"arch": arch, "prefill_cell": prefill_cell,
+           "decode_cell": decode_cell, "device_model": dc.asdict(dm)}
+    out = out_dir / f"devmodel__{arch}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] wrote {out}: {dm}")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -294,8 +335,17 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--emit-devmodel", action="store_true",
+                    help="emit the EmulatedBackend calibration from this "
+                         "arch's prefill/decode artifacts and exit")
     ap.add_argument("--out", default=str(ARTIFACTS))
     args = ap.parse_args()
+
+    if args.emit_devmodel:
+        if not args.arch:
+            ap.error("--emit-devmodel requires --arch")
+        emit_devmodel(args.arch, Path(args.out))
+        return
 
     meshes = [args.multi_pod]
     if args.both_meshes:

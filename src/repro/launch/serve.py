@@ -11,12 +11,14 @@ tokenize / dequeue statistics.
 from __future__ import annotations
 
 import argparse
+import json
 import statistics as st
 import time
 
 from repro.core.cpuutil import CpuSampler, cpu_budget
 from repro.core.devmodel import DeviceModel
 from repro.core.engine import EngineConfig, ServingSystem
+from repro.serving.scheduler import SchedulerConfig
 
 
 def main() -> None:
@@ -31,17 +33,41 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--async-sched", action="store_true")
     ap.add_argument("--yield-every", type=int, default=64)
+    ap.add_argument("--backend", default="emulated",
+                    choices=("emulated", "jax"),
+                    help="worker executor; jax runs the paged pallas "
+                         "decode (keep --kv-capacity small)")
+    ap.add_argument("--kv-capacity", type=int, default=0,
+                    help="KV capacity in token slots (default: 4M emulated; "
+                         "64K for --backend jax, whose page pool is dense)")
+    ap.add_argument("--block-size", type=int, default=64)
+    ap.add_argument("--ring-slot-bytes", type=int, default=0,
+                    help="override the auto-sized broadcast slot")
+    ap.add_argument("--devmodel", default=None,
+                    help="JSON devmodel calibration emitted by "
+                         "repro.launch.dryrun --emit-devmodel")
     args = ap.parse_args()
 
     got = cpu_budget(args.cores)
+    if not args.kv_capacity:
+        args.kv_capacity = (1 << 16) if args.backend == "jax" else (1 << 22)
+    if args.devmodel:
+        from pathlib import Path
+        device = DeviceModel(
+            **json.loads(Path(args.devmodel).read_text())["device_model"])
+    else:
+        device = DeviceModel(t_fixed=1e-3, t_prefill_tok=1e-6,
+                             t_decode_seq=2e-5)
     cfg = EngineConfig(
         tp_degree=args.tp, pool_width=args.pool_width,
-        device=DeviceModel(t_fixed=1e-3, t_prefill_tok=1e-6,
-                           t_decode_seq=2e-5),
+        scheduler=SchedulerConfig(kv_capacity_tokens=args.kv_capacity,
+                                  block_size=args.block_size),
+        device=device, backend=args.backend,
+        ring_slot_bytes=args.ring_slot_bytes,
         yield_every=args.yield_every, async_sched=args.async_sched,
     )
     print(f"[serve] tp={args.tp} cores={got} pool={args.pool_width} "
-          f"async_sched={args.async_sched}")
+          f"backend={args.backend} async_sched={args.async_sched}")
     text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
 
     sys_ = ServingSystem(cfg).start()
@@ -57,11 +83,13 @@ def main() -> None:
         results = sys_.collect(args.requests, timeout=120.0)
     stats = sys_.shutdown()
 
-    ttfts = sorted(r["t_first_token"] - r["t_arrival"]
-                   for r in results.values())
+    finished = [r for r in results.values() if not r.get("timed_out")]
+    ttfts = sorted(r["t_first_token"] - r["t_arrival"] for r in finished)
     toks = sorted(r["t_tokenize_done"] - r["t_tokenize_start"]
-                  for r in results.values())
-    print(f"[serve] completed {len(results)}/{args.requests}")
+                  for r in finished)
+    n_dead = len(results) - len(finished)
+    print(f"[serve] completed {len(finished)}/{args.requests}"
+          + (f" (timed out/rejected: {n_dead})" if n_dead else ""))
     if ttfts:
         print(f"[serve] TTFT p50={st.median(ttfts)*1e3:.1f}ms "
               f"p95={ttfts[int(0.95 * (len(ttfts) - 1))]*1e3:.1f}ms "
@@ -79,6 +107,10 @@ def main() -> None:
         print(f"[serve] sched p50={st.median(eng['sched_cost'])*1e6:.0f}us "
               f"steps={len(eng['sched_cost'])} "
               f"barrier p50={st.median(eng['barrier_wall'])*1e3:.2f}ms")
+    if eng and eng.get("payload_bytes"):
+        pb = eng["payload_bytes"]
+        print(f"[serve] broadcast payload p50={st.median(pb)/1024:.2f}KiB "
+              f"max={max(pb)/1024:.2f}KiB total={sum(pb)/1024:.0f}KiB")
     print(f"[serve] cpu saturation(>=95%)={sampler.saturation_seconds():.1f}s")
 
 

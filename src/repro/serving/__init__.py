@@ -1,5 +1,6 @@
+from repro.serving.blocks import BlockManager
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
 
-__all__ = ["Request", "RequestState", "Scheduler", "SchedulerConfig",
-           "StepPlan"]
+__all__ = ["BlockManager", "Request", "RequestState", "Scheduler",
+           "SchedulerConfig", "StepPlan"]

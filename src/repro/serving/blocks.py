@@ -1,0 +1,157 @@
+"""Paged KV-cache block manager (vLLM-style PagedAttention bookkeeping).
+
+KV memory is a pool of fixed-size blocks (``block_size`` token slots each).
+Every running request owns a *block table* — the ordered list of block ids
+holding its KV — which the scheduler broadcasts to the workers each step,
+so the control-plane payload scales with the batch like a real serving
+engine ("Mind the Memory Gap", arXiv:2503.08311 studies exactly this
+block-granular memory/batching interaction).
+
+Prefix caching is refcount-based: when a full block of prompt tokens has
+been computed, its chained hash (key(i) = hash(key(i-1), block_i tokens))
+is registered in ``_cache``.  A later request whose prompt matches locks
+(increfs) those blocks and skips their prefill.  Blocks whose refcount
+drops to zero but that are still registered move to an LRU *evictable*
+list: they keep their contents and can be re-locked for free, but are
+reclaimed (hash dropped) when allocation would otherwise fail.  This
+replaces the seed's ``_PrefixTrie`` grow-forever hash set — the cache can
+never reference more KV than physically exists.
+
+The manager is pure control-plane bookkeeping (no tensors); the
+``repro.backend`` executors index their physical caches with the block
+ids handed out here.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def chain_key(prev_key: int, block_tokens: Sequence[int]) -> int:
+    """Chained block hash: O(n) per prompt, not O(n^2/block) full tuples."""
+    return hash((prev_key, tuple(block_tokens)))
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 enable_prefix_cache: bool = True):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.enable_prefix_cache = enable_prefix_cache
+        self._free: collections.deque = collections.deque(range(num_blocks))
+        self._ref: List[int] = [0] * num_blocks
+        self._hash_of: List[Optional[int]] = [None] * num_blocks
+        self._cache: Dict[int, int] = {}           # chain key -> block id
+        # refcount-0 blocks that still hold registered KV, in LRU order
+        self._evictable: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks allocatable right now (truly free + evictable cached)."""
+        return len(self._free) + len(self._evictable)
+
+    @property
+    def used_blocks(self) -> int:
+        """Blocks referenced by at least one live request."""
+        return self.num_blocks - self.free_blocks
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._cache)
+
+    def ref_count(self, block_id: int) -> int:
+        return self._ref[block_id]
+
+    # -- prefix cache --------------------------------------------------------
+
+    def _walk_prefix(self, tokens: Sequence[int],
+                     max_tokens: Optional[int]) -> Tuple[int, List[int]]:
+        bs = self.block_size
+        limit = len(tokens) if max_tokens is None else min(len(tokens),
+                                                          max_tokens)
+        n, key, blks = 0, 0, []
+        for i in range(0, limit - bs + 1, bs):
+            key = chain_key(key, tokens[i:i + bs])
+            b = self._cache.get(key)
+            if b is None:
+                break
+            blks.append(b)
+            n = i + bs
+        return n, blks
+
+    def match_prefix(self, tokens: Sequence[int],
+                     max_tokens: Optional[int] = None) -> Tuple[int, List[int]]:
+        """Read-only probe: (cached token count, block ids), full blocks only.
+
+        ``max_tokens`` caps the match (the scheduler passes n_prompt - 1 so
+        the last prompt token is always computed, never skipped)."""
+        if not self.enable_prefix_cache:
+            return 0, []
+        return self._walk_prefix(tokens, max_tokens)
+
+    def lock_prefix(self, tokens: Sequence[int],
+                    max_tokens: Optional[int] = None) -> Tuple[int, List[int]]:
+        """Like match_prefix, but increfs the matched blocks (they become
+        part of the caller's block table and must be freed with free())."""
+        n, blks = self.match_prefix(tokens, max_tokens)
+        for b in blks:
+            self._incref(b)
+        return n, blks
+
+    def register(self, key: int, block_id: int) -> bool:
+        """Publish a fully-computed block under its chain key.  First writer
+        wins: a concurrent identical prompt keeps its duplicate block
+        private (freed normally when its request finishes)."""
+        if not self.enable_prefix_cache or key in self._cache:
+            return False
+        self._cache[key] = block_id
+        self._hash_of[block_id] = key
+        return True
+
+    # -- alloc / free --------------------------------------------------------
+
+    def _incref(self, block_id: int) -> None:
+        if self._ref[block_id] == 0:
+            # resurrect an evictable cached block
+            self._evictable.pop(block_id, None)
+        self._ref[block_id] += 1
+
+    def _evict_one(self) -> int:
+        block_id, _ = self._evictable.popitem(last=False)   # LRU
+        key = self._hash_of[block_id]
+        if key is not None:
+            del self._cache[key]
+            self._hash_of[block_id] = None
+        return block_id
+
+    def allocate(self, n: int) -> Optional[List[int]]:
+        """Hand out ``n`` blocks (refcount 1 each), evicting LRU cached
+        blocks if the free list runs dry.  All-or-nothing: returns None
+        when fewer than ``n`` blocks are reclaimable (caller preempts)."""
+        if n > self.free_blocks:
+            return None
+        out = []
+        for _ in range(n):
+            block_id = self._free.popleft() if self._free else self._evict_one()
+            assert self._ref[block_id] == 0
+            self._ref[block_id] = 1
+            out.append(block_id)
+        return out
+
+    def free(self, block_ids: Sequence[int]) -> None:
+        """Drop one reference per block.  Registered blocks whose refcount
+        hits zero become evictable (contents retained); unregistered ones
+        return to the free list."""
+        for b in block_ids:
+            assert self._ref[b] > 0, f"double free of block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                if self._hash_of[b] is not None:
+                    self._evictable[b] = None          # most-recently used
+                    self._evictable.move_to_end(b)
+                else:
+                    self._free.append(b)

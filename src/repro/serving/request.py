@@ -32,6 +32,12 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     kv_allocated: int = 0          # KV slots charged by the scheduler
 
+    # paged-KV state (repro.serving.blocks)
+    block_table: List[int] = dataclasses.field(default_factory=list)
+    kv_slots: int = 0              # token slots occupied in block_table
+    block_hashes: List[int] = dataclasses.field(default_factory=list)
+    n_preemptions: int = 0         # times evicted + recomputed under pressure
+
     # timeline (perf_counter seconds)
     t_arrival: float = 0.0
     t_tokenize_start: float = 0.0

@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler with chunked prefill + prefix caching.
+"""Continuous-batching scheduler with chunked prefill + paged KV blocks.
 
 Mirrors vLLM V1's scheduling model: every step the EngineCore re-decides
 the batch (this per-step dynamic decision is exactly why CUDA-Graph-style
@@ -8,18 +8,28 @@ whole-sequence capture cannot remove the CPU from the loop — paper §II-A③):
     ``max_num_seqs``);
   * remaining token budget (``max_tokens_per_step``) is filled with prefill
     chunks from the waiting queue (chunked prefill);
-  * a trie-based prefix cache lets identical prompt prefixes skip prefill
-    work (attackers in the paper's experiment send identical prompts —
-    vLLM's prefix caching is on by default, so we model it too).
+  * KV is managed at block granularity by ``repro.serving.blocks``: every
+    request carries a block table, admission/growth allocate blocks, and
+    when allocation fails the most recently admitted running request is
+    *preempted by recompute* (blocks freed, request requeued at the head —
+    its next prefill usually resumes cheaply from the prefix cache);
+  * refcounted prefix-cache blocks let identical prompt prefixes skip
+    prefill work (attackers in the paper's experiment send identical
+    prompts — vLLM's prefix caching is on by default, so we model it too).
 
 The scheduler is pure control-plane: it never touches tensors, so its CPU
-cost is measurable in isolation (repro.sim calibration).
+cost is measurable in isolation (repro.sim calibration).  The StepPlan it
+emits carries the per-request block tables and input token ids — the
+broadcast payload therefore scales with batch size the way a real
+engine's does (paper §V-B).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict, List, Optional, Tuple
 
+from repro.serving.blocks import BlockManager, chain_key
 from repro.serving.request import Request, RequestState
 
 
@@ -30,6 +40,11 @@ class SchedulerConfig:
     prefill_chunk: int = 2048          # max prefill tokens per request/step
     enable_prefix_cache: bool = True
     kv_capacity_tokens: int = 1 << 22  # total KV slots across the batch
+    block_size: int = 64               # KV tokens per page
+
+    @property
+    def num_kv_blocks(self) -> int:
+        return max(1, self.kv_capacity_tokens // self.block_size)
 
 
 @dataclasses.dataclass
@@ -38,58 +53,53 @@ class StepPlan:
     step_id: int
     prefill: List[Tuple[int, int, int]]   # (req_id, start, length)
     decode: List[int]                      # req_ids generating 1 token
-    preempted: List[int]
+    preempted: List[int]                   # req_ids evicted this step
+    block_tables: Dict[int, List[int]] = dataclasses.field(
+        default_factory=dict)              # req_id -> KV block ids
+    new_tokens: Dict[int, List[int]] = dataclasses.field(
+        default_factory=dict)              # req_id -> input token ids
+    _raw: Optional[bytes] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_tokens(self) -> int:
         return sum(l for _, _, l in self.prefill) + len(self.decode)
 
     def encode(self) -> bytes:
-        import json
-        return json.dumps({
-            "step": self.step_id,
-            "prefill": self.prefill,
-            "decode": self.decode,
-            "preempted": self.preempted,
-        }).encode()
+        if self._raw is None:
+            self._raw = json.dumps({
+                "step": self.step_id,
+                "prefill": self.prefill,
+                "decode": self.decode,
+                "preempted": self.preempted,
+                "block_tables": self.block_tables,
+                "new_tokens": self.new_tokens,
+            }).encode()
+        return self._raw
 
     @classmethod
     def decode_bytes(cls, raw: bytes) -> "StepPlan":
-        import json
         d = json.loads(raw)
         return cls(d["step"], [tuple(p) for p in d["prefill"]],
-                   d["decode"], d["preempted"])
+                   d["decode"], d["preempted"],
+                   {int(k): v for k, v in d.get("block_tables", {}).items()},
+                   {int(k): v for k, v in d.get("new_tokens", {}).items()})
 
+    @property
+    def payload_bytes(self) -> int:
+        """Actual broadcast size (serializes once, cached)."""
+        return len(self.encode())
 
-class _PrefixTrie:
-    """Block-hash prefix cache (block granularity = ``block`` tokens).
-
-    Chained block hashes (vLLM-style): key(i) = hash(key(i-1), block_i) —
-    O(n) per prompt, not O(n^2/block) full-tuple keys.
-    """
-
-    def __init__(self, block: int = 64):
-        self.block = block
-        self.known: set = set()
-
-    def _chain(self, tokens: List[int]):
-        key = 0
-        for i in range(0, len(tokens) - self.block + 1, self.block):
-            key = hash((key, tuple(tokens[i:i + self.block])))
-            yield i + self.block, key
-
-    def cached_prefix_len(self, tokens: List[int]) -> int:
-        n = 0
-        for end, key in self._chain(tokens):
-            if key in self.known:
-                n = end
-            else:
-                break
-        return n
-
-    def insert(self, tokens: List[int]) -> None:
-        for _, key in self._chain(tokens):
-            self.known.add(key)
+    def approx_payload_bytes(self) -> int:
+        """Cheap estimate of the JSON wire size for the DES (avoids paying
+        real serialization inside simulated sweeps)."""
+        if self._raw is not None:
+            return len(self._raw)
+        n_bt = sum(len(t) for t in self.block_tables.values())
+        n_nt = sum(len(t) for t in self.new_tokens.values())
+        return (64 + 18 * len(self.prefill) + 8 * len(self.decode)
+                + 8 * len(self.preempted) + 7 * n_bt + 9 * n_nt
+                + 12 * (len(self.block_tables) + len(self.new_tokens)))
 
 
 class Scheduler:
@@ -98,39 +108,108 @@ class Scheduler:
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.step_id = 0
-        self.prefix = _PrefixTrie()
-        self.kv_used = 0
+        self.blocks = BlockManager(
+            cfg.num_kv_blocks, cfg.block_size,
+            enable_prefix_cache=cfg.enable_prefix_cache)
 
     # -- queue management ----------------------------------------------------
 
     def add_request(self, req: Request) -> None:
         assert req.prompt_tokens is not None, "tokenize before scheduling"
+        full_need = -(-(req.n_prompt + req.max_new_tokens)
+                      // self.cfg.block_size)
+        if full_need > self.cfg.num_kv_blocks:
+            # can never fit the pool: reject up front (client-visible abort,
+            # same terminal state as a timeout) instead of parking it at the
+            # queue head where it would head-of-line-block all admission
+            req.state = RequestState.TIMED_OUT
+            return
         if self.cfg.enable_prefix_cache:
-            hit = self.prefix.cached_prefix_len(req.prompt_tokens)
-            # never skip the whole prompt: the last token must be computed
-            req.prefilled = min(hit, max(req.n_prompt - 1, 0))
-            self.prefix.insert(req.prompt_tokens)
+            # probe only (no locks while waiting); the hit is re-resolved —
+            # and the blocks actually locked — at admission, since eviction
+            # may shrink it meanwhile.  Cap at n_prompt - 1: the last token
+            # must be computed to produce the first output logits.
+            hit, _ = self.blocks.match_prefix(
+                req.prompt_tokens, max_tokens=max(req.n_prompt - 1, 0))
+            req.prefilled = hit
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
     # -- KV accounting -------------------------------------------------------
-    # Allocation and free are symmetric by construction: every kv_used
-    # increment is charged to the request (``kv_allocated``) and release
-    # refunds exactly that.  Computing the free side from n_prompt/generated
-    # would overcount prefix-cache hits (never allocated) and the first
-    # post-prefill token (charged as prefill, not decode).
+    # All KV state lives in the block manager: a request's charge is exactly
+    # its block table, so alloc/free are symmetric by construction (shared
+    # prefix blocks are refcounted, never double-freed or double-counted).
 
-    def _alloc_kv(self, req: Request, n: int) -> None:
-        req.kv_allocated += n
-        self.kv_used += n
+    @property
+    def kv_used(self) -> int:
+        """Token slots in blocks referenced by live requests."""
+        return self.blocks.used_blocks * self.cfg.block_size
 
-    def _free_kv(self, req: Request) -> None:
-        self.kv_used -= req.kv_allocated
+    def _alloc_slots(self, req: Request, n_tokens: int) -> bool:
+        """Grow ``req``'s block table to hold ``n_tokens`` more slots."""
+        bs = self.cfg.block_size
+        need = (-(-(req.kv_slots + n_tokens) // bs)) - len(req.block_table)
+        if need > 0:
+            got = self.blocks.allocate(need)
+            if got is None:
+                return False
+            req.block_table.extend(got)
+        req.kv_slots += n_tokens
+        req.kv_allocated = len(req.block_table) * bs
+        return True
+
+    def _release_blocks(self, req: Request) -> None:
+        self.blocks.free(req.block_table)
+        req.block_table = []
+        req.kv_slots = 0
         req.kv_allocated = 0
+
+    def _preempt(self, victim: Request, plan: StepPlan) -> int:
+        """Preemption by recompute: evict ``victim``'s KV and requeue it at
+        the head of the waiting queue.  Returns the token budget to refund
+        (the victim may already hold slots in this very plan).  On
+        re-admission its prefill restarts at 0 but typically resumes from
+        the prefix cache — its own computed blocks are evictable, not gone,
+        until memory pressure actually reclaims them.  (KV of already
+        *generated* tokens is dropped without re-prefill cost: a negligible
+        emulation optimism, decode tails are tiny next to prompts.)"""
+        refund = 0
+        if victim.req_id in plan.decode:
+            plan.decode.remove(victim.req_id)
+            refund += 1
+        kept = []
+        for entry in plan.prefill:
+            if entry[0] == victim.req_id:
+                refund += entry[2]
+            else:
+                kept.append(entry)
+        plan.prefill = kept
+        self._release_blocks(victim)
+        victim.prefilled = 0
+        victim.block_hashes = []       # recomputed blocks re-register
+        victim.state = RequestState.WAITING
+        victim.n_preemptions += 1
+        self.running.remove(victim)
+        self.waiting.insert(0, victim)
+        plan.preempted.append(victim.req_id)
+        return refund
+
+    def _allocate_with_preemption(self, req: Request, n_tokens: int,
+                                  plan: StepPlan) -> Tuple[bool, int]:
+        """Allocate slots for ``req``, preempting the most recently admitted
+        running requests until it fits.  Returns (ok, budget_refund); ok is
+        False when ``req`` itself had to be preempted."""
+        refund = 0
+        while not self._alloc_slots(req, n_tokens):
+            victim = self.running[-1]
+            refund += self._preempt(victim, plan)
+            if victim is req:
+                return False, refund
+        return True, refund
 
     def _finish(self, req: Request) -> None:
         req.state = RequestState.FINISHED
-        self._free_kv(req)
+        self._release_blocks(req)
         self.running.remove(req)
 
     def expire(self, now: float, timeout: float) -> List[Request]:
@@ -146,7 +225,7 @@ class Scheduler:
         for req in list(self.running):
             if not req.t_first_token and now - req.t_arrival > timeout:
                 req.state = RequestState.TIMED_OUT
-                self._free_kv(req)
+                self._release_blocks(req)
                 self.running.remove(req)
                 dead.append(req)
         return dead
@@ -156,72 +235,120 @@ class Scheduler:
     def schedule(self) -> Optional[StepPlan]:
         """Build the next StepPlan, mutating request states."""
         self.step_id += 1
-        budget = self.cfg.max_tokens_per_step
+        cfg = self.cfg
+        budget = cfg.max_tokens_per_step
         plan = StepPlan(self.step_id, [], [], [])
 
-        # 1. decodes first (latency priority, one token each)
-        for req in self.running:
-            if req.state == RequestState.DECODING and budget > 0:
-                plan.decode.append(req.req_id)
-                budget -= 1
-                self._alloc_kv(req, 1)
+        # 1. decodes first (latency priority, one token each).  Iterating a
+        # snapshot: _preempt may drop later entries, whose state flips to
+        # WAITING, so the state check below skips them.
+        for req in list(self.running):
+            if req.state != RequestState.DECODING or budget <= 0:
+                continue
+            ok, refund = self._allocate_with_preemption(req, 1, plan)
+            budget += refund
+            if not ok:
+                continue
+            plan.decode.append(req.req_id)
+            budget -= 1
 
         # 2. continue chunked prefills of running requests
-        for req in self.running:
-            if req.state == RequestState.PREFILLING and budget > 0:
-                n = min(req.prefill_remaining, self.cfg.prefill_chunk, budget)
-                if n > 0:
-                    plan.prefill.append((req.req_id, req.prefilled, n))
-                    req.prefilled += n
-                    budget -= n
-                    self._alloc_kv(req, n)
-                if req.prefill_remaining == 0:
-                    req.state = RequestState.DECODING
+        for req in list(self.running):
+            if req.state != RequestState.PREFILLING or budget <= 0:
+                continue
+            n = min(req.prefill_remaining, cfg.prefill_chunk, budget)
+            if n > 0:
+                ok, refund = self._allocate_with_preemption(req, n, plan)
+                budget += refund
+                if not ok:
+                    continue
+                plan.prefill.append((req.req_id, req.prefilled, n))
+                req.prefilled += n
+                budget -= n
+            if req.prefill_remaining == 0:
+                req.state = RequestState.DECODING
 
-        # 3. admit waiting requests while budget + slots + KV remain
+        # 3. admit waiting requests while budget + slots + blocks remain.
+        # Admission is optimistic (vLLM-style): it reserves blocks for the
+        # next chunk only, not the whole prompt + max_new_tokens — decode
+        # growth beyond capacity is handled by preemption, not head-of-line
+        # blocking.  Admission itself never preempts running work.
+        bs = cfg.block_size
         while (self.waiting and budget > 0
-               and len(self.running) < self.cfg.max_num_seqs):
+               and len(self.running) < cfg.max_num_seqs):
             req = self.waiting[0]
-            need_kv = req.prefill_remaining + req.max_new_tokens
-            if self.kv_used + need_kv > self.cfg.kv_capacity_tokens:
+            # add_request() rejects requests that can never fit, so the head
+            # of the queue always fits the pool when it runs alone
+            if cfg.enable_prefix_cache:
+                # lock the cached prefix (re-resolved: eviction may have
+                # shrunk the probe add_request() recorded)
+                hit, blks = self.blocks.lock_prefix(
+                    req.prompt_tokens, max_tokens=max(req.n_prompt - 1, 0))
+                req.prefilled = hit
+                req.block_table = blks
+                req.kv_slots = hit
+                req.kv_allocated = len(blks) * bs
+            n = min(req.prefill_remaining, cfg.prefill_chunk, budget)
+            if not self._alloc_slots(req, n):
+                self._release_blocks(req)      # undo prefix locks; retry later
                 break
             self.waiting.pop(0)
             self.running.append(req)
             req.state = RequestState.PREFILLING
-            n = min(req.prefill_remaining, self.cfg.prefill_chunk, budget)
-            plan.prefill.append((req.req_id, req.prefilled, n))
-            req.prefilled += n
-            budget -= n
-            self._alloc_kv(req, n)
+            if n > 0:
+                plan.prefill.append((req.req_id, req.prefilled, n))
+                req.prefilled += n
+                budget -= n
             if req.prefill_remaining == 0:
+                # n == 0 only for empty prompts: straight to decode
                 req.state = RequestState.DECODING
 
         if not plan.prefill and not plan.decode:
             self.step_id -= 1
             return None
+
+        # 4. attach the per-request block tables + input ids the workers
+        # need — the part of the payload that grows with the batch.
+        by_id = {r.req_id: r for r in self.running}
+        for rid, start, n in plan.prefill:
+            req = by_id[rid]
+            plan.block_tables[rid] = list(req.block_table)
+            plan.new_tokens[rid] = list(req.prompt_tokens[start:start + n])
+        for rid in plan.decode:
+            req = by_id[rid]
+            plan.block_tables[rid] = list(req.block_table)
+            last = (req.generated[-1] if req.generated
+                    else (req.prompt_tokens[-1] if req.prompt_tokens else 0))
+            plan.new_tokens[rid] = [last]
         return plan
 
-    def complete_step(self, plan: StepPlan, now: float) -> List[Request]:
-        """Account one executed step; returns newly finished requests."""
+    def complete_step(self, plan: StepPlan, now: float,
+                      result=None) -> List[Request]:
+        """Account one executed step; returns newly finished requests.
+
+        ``result`` is an optional ``repro.backend.StepResult`` whose sampled
+        tokens are appended instead of the emulated placeholder 0."""
         done = []
+        tokens = result.tokens if result is not None else {}
         by_id = {r.req_id: r for r in self.running}
         for rid in plan.decode:
             req = by_id.get(rid)
             if req is None:
                 continue
-            req.generated.append(0)
+            req.generated.append(tokens.get(rid, 0))
             if not req.t_first_token:
                 req.t_first_token = now
             if len(req.generated) >= req.max_new_tokens:
                 req.t_done = now
                 done.append(req)
         # a request whose prefill finished this step produces its first token
-        for rid, _, _ in plan.prefill:
+        for rid, start, n in plan.prefill:
             req = by_id.get(rid)
             if req is None:
                 continue
+            self._register_computed(req, start + n)
             if req.state == RequestState.DECODING and not req.t_first_token:
-                req.generated.append(0)
+                req.generated.append(tokens.get(rid, 0))
                 req.t_first_token = now
                 if len(req.generated) >= req.max_new_tokens:
                     req.t_done = now
@@ -229,6 +356,21 @@ class Scheduler:
         for req in done:
             self._finish(req)
         return done
+
+    def _register_computed(self, req: Request, n_computed: int) -> None:
+        """Publish fully-computed prompt blocks to the prefix cache.  The
+        chain-key memo on the request makes this O(new blocks), not
+        O(total blocks), per chunk."""
+        if not self.cfg.enable_prefix_cache:
+            return
+        bs = self.cfg.block_size
+        nb = min(n_computed // bs, len(req.block_table))
+        while len(req.block_hashes) < nb:
+            i = len(req.block_hashes)
+            prev = req.block_hashes[-1] if req.block_hashes else 0
+            key = chain_key(prev, req.prompt_tokens[i * bs:(i + 1) * bs])
+            req.block_hashes.append(key)
+            self.blocks.register(key, req.block_table[i])
 
     @property
     def has_work(self) -> bool:

@@ -19,6 +19,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
+from repro.backend.emulated import EmulatedBackend
 from repro.core.devmodel import DeviceModel
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
@@ -42,6 +43,9 @@ class ServingParams:
     sched_cost_base: float = 120e-6
     sched_cost_per_seq: float = 6e-6
     enqueue_cost: float = 15e-6
+    # serializing the plan (block tables + input ids) is per-byte CPU work
+    # — the broadcast cost now scales with batch size (paper §V-B)
+    serialize_cost_per_byte: float = 1.5e-9
     dequeue_cost: float = 10e-6      # work after the spin
     dispatch_cost: float = 60e-6     # per-step kernel-launch batch
     device: DeviceModel = DeviceModel()
@@ -76,6 +80,8 @@ class ServingModel:
         self.p = params
         self.sim = Sim(params.n_cores, quantum=params.quantum)
         self.sched = Scheduler(params.scheduler)
+        # virtual-time device: the backend's cost model, never its sleep
+        self.backend = EmulatedBackend(params.device, sleep=False)
         self.requests: List[Request] = []
         self.tok_queue: List[Request] = []
         self.tok_ev = self.sim.event("tok-queue")
@@ -188,7 +194,8 @@ class ServingModel:
             step = plan.step_id
             self.n_steps += 1
             msg, done = self._get_step_events(step)
-            yield ("cpu", p.enqueue_cost)
+            yield ("cpu", p.enqueue_cost
+                   + plan.approx_payload_bytes() * p.serialize_cost_per_byte)
             self.sim.fire(msg)
             # completion poll: busy-wait on the board (paper §V-B)
             t0 = self.sim.now
@@ -228,7 +235,7 @@ class ServingModel:
         plan = self._plans.get(step)
         if plan is None:
             return 1e-3
-        return self.p.device.step_time(plan) * self._fusion_rounds(plan)
+        return self.backend.step_cost(plan) * self._fusion_rounds(plan)
 
     # -- run ---------------------------------------------------------------------
 

@@ -1,0 +1,166 @@
+"""Backend conformance: emulated and jax execute the same plans the same.
+
+The acceptance contract: driving an identical request workload through
+``Scheduler`` + backend must yield the same request completion order and
+token counts for ``EmulatedBackend`` and ``JaxBackend`` — execution is a
+pluggable detail, scheduling semantics are not.  Also covers the paged
+decode kernel against its gather reference.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.backend import EmulatedBackend, StepResult, make_backend
+from repro.backend.jax_backend import JaxBackend
+from repro.core.devmodel import DeviceModel
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+BLOCK, NBLOCKS = 8, 64
+SCHED_CFG = SchedulerConfig(
+    max_num_seqs=8, max_tokens_per_step=64, prefill_chunk=16,
+    enable_prefix_cache=True, block_size=BLOCK,
+    kv_capacity_tokens=NBLOCKS * BLOCK)
+
+
+def _workload():
+    specs = [(21, 3, 1), (40, 5, 2), (21, 2, 1), (9, 4, 3)]
+    reqs = []
+    for n, max_new, stream in specs:
+        r = Request(text="", max_new_tokens=max_new)
+        base = stream << 10          # keep ids inside the tiny vocab range
+        r.prompt_tokens = [base + (i % 700) for i in range(n)]
+        reqs.append(r)
+    return reqs
+
+
+def _drive(backend, max_steps: int = 500):
+    """Run the workload to completion; returns (completion order, counts,
+    sampled tokens per request)."""
+    sched = Scheduler(SCHED_CFG)
+    reqs = _workload()
+    for r in reqs:
+        sched.add_request(r)
+    idx_of = {r.req_id: i for i, r in enumerate(reqs)}   # workload position
+    order, step = [], 0
+    while sched.has_work and step < max_steps:
+        plan = sched.schedule()
+        if plan is None:
+            break
+        step += 1
+        result = backend.execute(plan)
+        assert isinstance(result, StepResult)
+        assert result.step_id == plan.step_id
+        for req in sched.complete_step(plan, float(step), result):
+            order.append(idx_of[req.req_id])
+            if hasattr(backend, "release"):
+                backend.release(req.req_id)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    counts = {idx_of[r.req_id]: len(r.generated) for r in reqs}
+    tokens = {idx_of[r.req_id]: list(r.generated) for r in reqs}
+    return order, counts, tokens
+
+
+def test_emulated_jax_conformance():
+    em_order, em_counts, _ = _drive(
+        EmulatedBackend(DeviceModel(t_fixed=1e-5, t_prefill_tok=1e-8,
+                                    t_decode_seq=1e-6)))
+    jx_order, jx_counts, jx_tokens = _drive(
+        JaxBackend(block_size=BLOCK, num_blocks=NBLOCKS, vocab=128,
+                   interpret=True))
+    assert em_order == jx_order
+    assert em_counts == jx_counts
+    # the jax backend actually samples (not the emulated placeholder 0)
+    assert any(any(t != 0 for t in toks) for toks in jx_tokens.values())
+
+
+def test_jax_backend_is_deterministic():
+    _, _, a = _drive(JaxBackend(block_size=BLOCK, num_blocks=NBLOCKS,
+                                vocab=128, interpret=True))
+    _, _, b = _drive(JaxBackend(block_size=BLOCK, num_blocks=NBLOCKS,
+                                vocab=128, interpret=True))
+    assert a == b
+
+
+def test_make_backend_registry():
+    em = make_backend("emulated", device=DeviceModel())
+    assert isinstance(em, EmulatedBackend)
+    jx = make_backend("jax", scheduler_cfg=SCHED_CFG)
+    assert isinstance(jx, JaxBackend)
+    assert jx.num_blocks == SCHED_CFG.num_kv_blocks
+    with pytest.raises(ValueError):
+        make_backend("tpu")
+
+
+def test_emulated_cost_includes_block_tables():
+    from repro.serving.scheduler import StepPlan
+    dev = DeviceModel(t_fixed=0.0, t_prefill_tok=0.0, t_decode_seq=0.0,
+                      t_block_entry=1e-6)
+    be = EmulatedBackend(dev, sleep=False)
+    bare = StepPlan(1, [], [1], [])
+    heavy = StepPlan(2, [], [1], [], block_tables={1: list(range(500))})
+    assert be.step_cost(bare) == 0.0
+    assert be.step_cost(heavy) == pytest.approx(500e-6)
+
+
+def test_paged_kernel_matches_reference():
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_decode_attention import (
+        paged_decode_attention,
+        paged_decode_attention_reference,
+    )
+    rng = np.random.default_rng(7)
+    B, H, KV, D, N, blk, nb = 4, 8, 2, 16, 24, 8, 5
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((KV, N, blk, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((KV, N, blk, D)), jnp.float32)
+    perm = rng.permutation(N)
+    bt = np.full((B, nb), -1, np.int32)
+    sl = np.zeros((B,), np.int32)
+    lens = [37, 8, 0, 25]
+    used = 0
+    for b, n_tok in enumerate(lens):
+        n_pages = -(-n_tok // blk)
+        bt[b, :n_pages] = perm[used:used + n_pages]
+        used += n_pages
+        sl[b] = n_tok
+    out = paged_decode_attention(q, kp, vp, jnp.asarray(bt),
+                                 jnp.asarray(sl), interpret=True)
+    ref = paged_decode_attention_reference(q, kp, vp, jnp.asarray(bt),
+                                           jnp.asarray(sl))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_jax_backend_shares_prefix_pages():
+    """Two requests with identical prompts: the scheduler hands the second
+    the first's cached pages, and the jax backend decodes it correctly
+    against KV it never wrote itself."""
+    sched = Scheduler(SCHED_CFG)
+    backend = JaxBackend(block_size=BLOCK, num_blocks=NBLOCKS, vocab=128,
+                         interpret=True)
+
+    def run_one(stream_tokens, max_new=3):
+        r = Request(text="", max_new_tokens=max_new)
+        r.prompt_tokens = list(stream_tokens)
+        sched.add_request(r)
+        step = 0
+        while sched.has_work and step < 200:
+            plan = sched.schedule()
+            if plan is None:
+                break
+            step += 1
+            res = backend.execute(plan)
+            sched.complete_step(plan, float(step), res)
+        assert r.state == RequestState.FINISHED
+        return r
+
+    prompt = [3 + (i % 90) for i in range(33)]
+    a = run_one(prompt)
+    b = run_one(prompt)
+    assert b.prefilled >= 33 - BLOCK - 1 and b.prefilled > 0
+    # same prompt + deterministic greedy sampling -> same continuation,
+    # even though b's prefix KV lives in pages written for a
+    assert b.generated[:3] == a.generated[:3]

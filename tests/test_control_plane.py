@@ -9,7 +9,7 @@ import pytest
 from repro.core.devmodel import DeviceModel
 from repro.core.engine import EngineConfig, ServingSystem
 from repro.core.shm_broadcast import CompletionBoard, ShmBroadcastQueue
-from repro.serving.scheduler import StepPlan
+from repro.serving.scheduler import SchedulerConfig, StepPlan
 
 _CTX = mp.get_context("fork")
 
@@ -109,6 +109,63 @@ def test_step_plan_roundtrip():
     q = StepPlan.decode_bytes(p.encode())
     assert q.step_id == 7 and q.prefill == p.prefill and q.decode == p.decode
     assert q.n_tokens == 128 + 64 + 2
+
+
+def test_step_plan_roundtrip_with_block_tables():
+    p = StepPlan(9, [(1, 0, 16)], [2], [],
+                 block_tables={1: [4, 7], 2: [0, 1, 2]},
+                 new_tokens={1: list(range(16)), 2: [99]})
+    q = StepPlan.decode_bytes(p.encode())
+    assert q.block_tables == p.block_tables      # int keys survive JSON
+    assert q.new_tokens == p.new_tokens
+    assert q.payload_bytes == p.payload_bytes
+    # the payload grows with the batch metadata — the §V-B scaling
+    bare = StepPlan(9, [(1, 0, 16)], [2], [])
+    assert p.payload_bytes > bare.payload_bytes
+    approx = p.approx_payload_bytes()
+    assert 0.5 * p.payload_bytes < approx < 2 * p.payload_bytes
+
+
+def test_engine_expires_stuck_requests():
+    """The live EngineCore enforces request_timeout and emits TIMED_OUT
+    records, so collect() terminates even when a request can never run
+    (here: a prompt larger than the whole KV pool)."""
+    cfg = EngineConfig(
+        tp_degree=1, pool_width=1,
+        scheduler=SchedulerConfig(kv_capacity_tokens=64, block_size=8,
+                                  enable_prefix_cache=False),
+        device=DeviceModel(t_fixed=1e-4, t_prefill_tok=1e-7,
+                           t_decode_seq=1e-5),
+        yield_every=64,
+        request_timeout=1.0,
+    )
+    sys_ = ServingSystem(cfg).start()
+    try:
+        sys_.submit("way too long " * 40, max_new_tokens=4)   # > 64 slots
+        sys_.submit("short prompt", max_new_tokens=2)
+        results = sys_.collect(2, timeout=30.0)
+        assert len(results) == 2, "timed-out request must still report"
+        by_timeout = {r["timed_out"] for r in results.values()}
+        assert by_timeout == {True, False}
+        ok = next(r for r in results.values() if not r["timed_out"])
+        assert ok["n_generated"] == 2
+        dead = next(r for r in results.values() if r["timed_out"])
+        assert dead["t_first_token"] == 0.0
+    finally:
+        sys_.shutdown()
+
+
+def test_submit_surfaces_encode_exceptions_at_shutdown():
+    """Tokenizer-pool futures are retained when pool_width > 1: an encode
+    exception must not vanish silently."""
+    cfg = EngineConfig(tp_degree=1, pool_width=2,
+                       device=DeviceModel(t_fixed=1e-4, t_prefill_tok=1e-7,
+                                          t_decode_seq=1e-5),
+                       yield_every=64)
+    sys_ = ServingSystem(cfg).start()
+    sys_.submit(None)                  # encode(None) raises on the pool
+    with pytest.raises(TypeError):     # shutdown waits for in-flight encodes
+        sys_.shutdown()
 
 
 def test_async_lookahead_engine_end_to_end():

@@ -60,14 +60,48 @@ def test_decode_priority_over_prefill():
 
 
 def test_prefix_cache_skips_shared_prefill():
+    """A prompt identical to one whose blocks were computed skips all but
+    the tail (block-granular, and the last token is always computed).
+    Unlike the seed's trie, a prefix only hits once its KV blocks actually
+    exist — vLLM semantics."""
     cfg = SchedulerConfig(enable_prefix_cache=True)
     sched = Scheduler(cfg)
     a = _req(512, stream=7)
     sched.add_request(a)
+    drain(sched)                        # a's blocks computed + registered
     b = _req(512, stream=7)             # identical prompt
     sched.add_request(b)
     assert b.prefilled >= 512 - 64 - 1  # all but the tail skipped
-    assert a.prefilled == 0
+    assert a.prefilled == 512
+    plans = drain(sched)
+    # b's admission locked cached blocks: its table reuses a's block ids
+    assert b.state == RequestState.FINISHED
+    assert sum(l for p in plans for _, _, l in p.prefill) == 64
+
+
+def test_preemption_by_recompute_under_kv_pressure():
+    """With KV for ~1.5 requests, admitting two forces the younger one to
+    be evicted (recompute) once decode growth exhausts the blocks; both
+    still finish and no block leaks (free_blocks returns to initial)."""
+    cfg = SchedulerConfig(max_tokens_per_step=256, prefill_chunk=128,
+                          enable_prefix_cache=False, block_size=16,
+                          kv_capacity_tokens=192)     # 12 blocks
+    sched = Scheduler(cfg)
+    initial_free = sched.blocks.free_blocks
+    a = _req(96, max_new=40, stream=1)      # 6 blocks + decode growth
+    b = _req(80, max_new=40, stream=2)      # 5 blocks + decode growth
+    sched.add_request(a)
+    sched.add_request(b)
+    plans = drain(sched)
+    assert a.state == RequestState.FINISHED
+    assert b.state == RequestState.FINISHED
+    assert len(a.generated) == 40 and len(b.generated) == 40
+    preempted = [rid for p in plans for rid in p.preempted]
+    assert preempted, "KV pressure must have forced a preemption"
+    assert a.n_preemptions + b.n_preemptions == len(preempted)
+    # no leaked blocks after drain
+    assert sched.blocks.free_blocks == initial_free
+    assert sched.kv_used == 0
 
 
 def test_kv_accounting_symmetric_with_prefix_cache():
@@ -109,6 +143,23 @@ def test_kv_accounting_symmetric_on_timeout():
     assert dead == [r] and r.state == RequestState.TIMED_OUT
     assert sched.kv_used == 0 and r.kv_allocated == 0
     assert not sched.has_work
+
+
+def test_infeasible_request_rejected_up_front():
+    """A request that can never fit the KV pool is aborted at add_request
+    instead of head-of-line blocking admission behind it."""
+    cfg = SchedulerConfig(enable_prefix_cache=False, block_size=8,
+                          kv_capacity_tokens=64)
+    sched = Scheduler(cfg)
+    huge = _req(1000, max_new=2, stream=1)
+    ok = _req(16, max_new=2, stream=2)
+    sched.add_request(huge)
+    sched.add_request(ok)
+    assert huge.state == RequestState.TIMED_OUT
+    assert sched.waiting == [ok]
+    drain(sched)
+    assert ok.state == RequestState.FINISHED
+    assert sched.kv_used == 0
 
 
 def test_expiry_releases_queue():
