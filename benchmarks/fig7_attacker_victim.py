@@ -4,6 +4,13 @@ Simulator sweep (calibrated DES; cores 5..64 are impossible natively on
 this 1-core box).  Reports per-config victim TTFTs (first victim +
 completed-victim mean), timeout counts, and the Fig. 9 speedup heatmap of
 best CPU-abundant config vs the least-CPU case ((#GPUs+1) cores).
+
+The sweep is parameterized over the scheduler's preemption policy
+(``--policy recompute|swap|adaptive``; default recompute, matching the
+paper's vLLM setup).  Victim TTFT at a given core count depends on what
+an eviction costs under the chosen policy — the dedicated policy
+comparison at the KV-capacity cliff lives in
+benchmarks/preemption_policy.py.
 """
 from __future__ import annotations
 
@@ -11,7 +18,8 @@ import json
 from pathlib import Path
 from typing import Optional
 
-from repro.sim.serving import attacker_victim_workload, llama8b_tp4_params
+from repro.sim.serving import (attacker_victim_workload, llama8b_tp4_params,
+                               victim_stats)
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
 
@@ -21,25 +29,21 @@ def core_levels(tp: int):
 
 
 def one_cell(cores: int, tp: int, rps: float, attacker_tokens: int,
-             duration: float = 45.0) -> dict:
-    p = llama8b_tp4_params(cores, tp=tp)
+             duration: float = 45.0, policy: str = "recompute") -> dict:
+    p = llama8b_tp4_params(cores, tp=tp, preemption_policy=policy)
     res = attacker_victim_workload(
         p, attacker_rps=rps, attacker_tokens=attacker_tokens,
         n_victims=5, duration=duration, horizon=duration + 260.0)
-    tt = res.victim_ttfts()
-    done = [t for t in tt if t is not None and t < p.timeout]
     return {
         "cores": cores, "tp": tp, "rps": rps, "attacker_sl": attacker_tokens,
-        "victim_ttfts": [round(t, 2) if t is not None else None for t in tt],
-        "first_victim_ttft": round(tt[0], 2) if tt and tt[0] else None,
-        "mean_completed_ttft": (round(sum(done) / len(done), 2)
-                                if done else None),
-        "timeouts": sum(1 for t in tt if t is None or t >= p.timeout),
+        "policy": policy,
+        **victim_stats(res, p.timeout),
         "saturation_s": round(res.saturation_s, 1),
     }
 
 
-def run(write: bool = True, fast: bool = False) -> dict:
+def run(write: bool = True, fast: bool = False,
+        policy: str = "recompute") -> dict:
     sweeps = []
     tps = (4,) if fast else (4, 8)
     rpss = (8,) if fast else (8, 16)
@@ -48,7 +52,8 @@ def run(write: bool = True, fast: bool = False) -> dict:
         for rps in rpss:
             for sl in sls:
                 for cores in core_levels(tp):
-                    sweeps.append(one_cell(cores, tp, rps, sl))
+                    sweeps.append(one_cell(cores, tp, rps, sl,
+                                           policy=policy))
 
     # Fig 9: best speedup of CPU-abundant configs vs least-CPU
     heat = []
@@ -71,16 +76,18 @@ def run(write: bool = True, fast: bool = False) -> dict:
                     speed = None
                 heat.append({"tp": tp, "rps": rps, "attacker_sl": sl,
                              "speedup_best_vs_least": speed})
-    out = {"cells": sweeps, "fig9_speedups": heat}
+    out = {"policy": policy, "cells": sweeps, "fig9_speedups": heat}
     if write:
+        suffix = "" if policy == "recompute" else f"__{policy}"
         ARTIFACTS.mkdir(parents=True, exist_ok=True)
-        (ARTIFACTS / "fig7_attacker_victim.json").write_text(
+        (ARTIFACTS / f"fig7_attacker_victim{suffix}.json").write_text(
             json.dumps(out, indent=1))
     return out
 
 
-def main(fast: bool = False) -> None:
-    out = run(fast=fast)
+def main(fast: bool = False, policy: str = "recompute") -> None:
+    out = run(fast=fast, policy=policy)
+    print(f"policy={policy}")
     print("tp,rps,attacker_sl,cores,first_ttft,mean_ttft,timeouts,sat_s")
     for c in out["cells"]:
         print(f"{c['tp']},{c['rps']},{c['attacker_sl']},{c['cores']},"
@@ -93,5 +100,10 @@ def main(fast: bool = False) -> None:
 
 
 if __name__ == "__main__":
-    import sys
-    main(fast="--fast" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--policy", default="recompute",
+                    choices=("recompute", "swap", "adaptive"))
+    args = ap.parse_args()
+    main(fast=args.fast, policy=args.policy)

@@ -1,0 +1,152 @@
+"""Preemption-policy comparison: recompute vs swap vs adaptive at the cliff.
+
+Reruns the paper's attacker/victim workload (same DES + real Scheduler as
+benchmarks/fig7_attacker_victim.py) with the KV pool shrunk to the
+capacity cliff — attackers camp in decode holding ~14K-token contexts
+until the resident batch outgrows the pool — where the preemption policy
+decides who pays: *recompute* converts every eviction back into
+CPU-scheduled prefill work (the paper's worst case — saved KV state
+becomes new control-plane load), *swap* parks the victim's blocks in the
+bounded host tier at interconnect cost, and *adaptive* prices each victim
+individually (round-trip transfer vs re-prefill of non-cache-resumable
+tokens, calibrated from the DeviceModel).  "Mind the Memory Gap"
+(arXiv:2503.08311) is the reference for why large-batch serving lives at
+exactly this cliff.
+
+The sweep crosses three regime knobs:
+
+  * interconnect — ``pcie`` (~25 GB/s effective, t_swap_block=3e-4) vs a
+    ``coupled`` CPU-GPU part (~75 GB/s, 1e-4; arXiv:2504.11750 is the
+    case for host memory as a first-class KV tier on such parts);
+  * prefix cache — on (a victim's own evictable blocks make recompute
+    near-free) vs off (recompute pays full re-prefill);
+  * pressure — ``burst`` (15 s attack) vs ``sustained`` (30 s): under
+    sustained overload a swapped request cycles (restore -> re-evict),
+    paying the round trip repeatedly, so swap's burst-regime win erodes.
+
+Measured shape: recompute wins whenever the cache resumes it or the
+transfer is PCIe-priced; swap wins bursts on coupled parts; under
+sustained overload recompute wins everywhere.  Adaptive tracks the
+winner in every regime except sustained+coupled+no-cache, where its
+myopic per-victim pricing cannot see overload depth (ROADMAP names the
+feedback signal as the follow-on).
+Reports per-policy victim TTFT / timeout counts plus deltas vs the
+recompute baseline of the same regime, and the eviction traffic
+(preemptions, swaps) that explains them.
+Artifact: artifacts/preemption_policy.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.serving.scheduler import PREEMPTION_POLICIES
+from repro.sim.serving import (attacker_victim_workload, llama8b_tp4_params,
+                               victim_stats)
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+# the cliff: 10 rps of 14K-token attackers with 48-token decode tails
+# hold ~500K tokens of would-be-resident KV against a 160K-slot pool
+KV_CAPACITY = 160_000
+ATTACKER_TOKENS = 14_000
+ATTACKER_NEW_TOKENS = 48
+VICTIM_TOKENS = 2_800
+
+INTERCONNECTS = {"pcie": 3e-4, "coupled": 1e-4}   # t_swap_block seconds
+PRESSURES = {"burst": 15.0, "sustained": 30.0}    # attack duration seconds
+
+
+def one_cell(policy: str, interconnect: str, prefix_cache: bool, *,
+             cores: int = 9, tp: int = 4, rps: float = 10.0,
+             duration: float = 30.0) -> dict:
+    p = llama8b_tp4_params(cores, tp=tp, preemption_policy=policy,
+                           kv_capacity_tokens=KV_CAPACITY)
+    device = dataclasses.replace(p.device,
+                                 t_swap_block=INTERCONNECTS[interconnect])
+    sched = dataclasses.replace(p.scheduler,
+                                enable_prefix_cache=prefix_cache,
+                                **device.preemption_calibration())
+    p = dataclasses.replace(p, device=device, scheduler=sched)
+    res = attacker_victim_workload(
+        p, attacker_rps=rps, attacker_tokens=ATTACKER_TOKENS,
+        n_victims=5, victim_tokens=VICTIM_TOKENS,
+        attacker_new_tokens=ATTACKER_NEW_TOKENS,
+        duration=duration, horizon=duration + 260.0)
+    victims = res.victims()
+    return {
+        "policy": policy, "interconnect": interconnect,
+        "prefix_cache": prefix_cache, "cores": cores, "tp": tp, "rps": rps,
+        "kv_capacity": KV_CAPACITY,
+        **victim_stats(res, p.timeout),
+        "victim_preemptions": sum(r.n_preemptions for r in victims),
+        "victim_swaps": sum(r.n_swaps for r in victims),
+        "total_preemptions": sum(r.n_preemptions for r in res.requests),
+        "total_swaps": sum(r.n_swaps for r in res.requests),
+        "saturation_s": round(res.saturation_s, 1),
+    }
+
+
+def run(write: bool = True, fast: bool = False) -> dict:
+    pressures = ("burst",) if fast else tuple(PRESSURES)
+    caches = (False,) if fast else (False, True)
+    cells, deltas = [], []
+    for pressure in pressures:
+        for prefix_cache in caches:
+            for interconnect in INTERCONNECTS:
+                group = [one_cell(policy, interconnect, prefix_cache,
+                                  duration=PRESSURES[pressure])
+                         for policy in PREEMPTION_POLICIES]
+                for c in group:
+                    c["pressure"] = pressure
+                cells.extend(group)
+                base = group[0]
+                assert base["policy"] == "recompute"
+
+                def _delta(a, b):
+                    return (None if (a is None or b is None)
+                            else round(a - b, 2))
+
+                for c in group[1:]:
+                    deltas.append({
+                        "policy": c["policy"], "pressure": pressure,
+                        "interconnect": interconnect,
+                        "prefix_cache": prefix_cache,
+                        "mean_ttft_delta_s": _delta(
+                            c["mean_completed_ttft"],
+                            base["mean_completed_ttft"]),
+                        "timeouts_delta": c["timeouts"] - base["timeouts"],
+                    })
+    out = {"cells": cells, "deltas_vs_recompute": deltas}
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "preemption_policy.json").write_text(
+            json.dumps(out, indent=1))
+    return out
+
+
+def main(fast: bool = False) -> None:
+    out = run(fast=fast)
+    print("pressure,cache,interconnect,policy,first_ttft,mean_ttft,"
+          "timeouts,preempts,swaps,sat_s")
+    for c in out["cells"]:
+        print(f"{c['pressure']},{int(c['prefix_cache'])},"
+              f"{c['interconnect']},{c['policy']},"
+              f"{c['first_victim_ttft']},{c['mean_completed_ttft']},"
+              f"{c['timeouts']},{c['total_preemptions']},{c['total_swaps']},"
+              f"{c['saturation_s']}")
+    print("-- victim mean-TTFT deltas vs recompute, same regime "
+          "(negative = policy wins) --")
+    for d in out["deltas_vs_recompute"]:
+        dt = d["mean_ttft_delta_s"]
+        dt = "n/a (no completions)" if dt is None else f"{dt:+}s"
+        print(f"{d['pressure']:9s} cache={int(d['prefix_cache'])} "
+              f"{d['interconnect']:8s} "
+              f"{d['policy']:9s}: mean_ttft {dt}, "
+              f"timeouts {d['timeouts_delta']:+d}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

@@ -30,6 +30,11 @@ def main() -> None:
     _section("fig7+9: attacker/victim TTFT vs cores (sim sweep)")
     fig7_attacker_victim.main(fast=True)
 
+    from benchmarks import preemption_policy
+    _section("preemption policy: recompute vs swap vs adaptive at the "
+             "KV cliff")
+    preemption_policy.main(fast=fast)
+
     from benchmarks import fig8_sequential_victims
     _section("fig8: sequential victim TTFT growth")
     fig8_sequential_victims.main(fast=fast)

@@ -33,5 +33,6 @@ def make_backend(name: str, *, device=None, scheduler_cfg=None):
         from repro.serving.scheduler import SchedulerConfig
         cfg = scheduler_cfg if scheduler_cfg is not None else SchedulerConfig()
         return JaxBackend(block_size=cfg.block_size,
-                          num_blocks=cfg.num_kv_blocks)
+                          num_blocks=cfg.num_kv_blocks,
+                          num_swap_blocks=cfg.num_swap_blocks)
     raise ValueError(f"unknown backend {name!r} (want 'emulated' or 'jax')")

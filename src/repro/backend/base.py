@@ -9,6 +9,26 @@ the calibrated-sleep device model (the paper's measurement instrument);
 ``JaxBackend`` runs real batched decode through the paged pallas kernel
 against a block-indexed cache.  This is also the layer the heterogeneous
 CPU/GPU execution directions (arXiv:2504.11750) plug into.
+
+The Backend contract (what every implementation must honor):
+
+  * one ``execute(plan)`` per ``StepPlan``, in step_id order — a backend
+    may keep per-request state (sequence lengths, KV pages) keyed by the
+    ids in the plans, and the scheduler guarantees a request's plans
+    arrive in causal order;
+  * within one plan, apply directives in this order: ``swap_outs``
+    (device pages -> host tier), then ``restores`` (host tier -> device
+    pages), then prefill/decode compute.  A device block freed by a
+    swap-out may be reallocated — even as a restore target — in the SAME
+    plan, so reordering corrupts KV;
+  * ids in ``plan.preempted`` had their KV discarded (recompute policy):
+    drop any state for them.  Swapped-out requests are NOT in
+    ``preempted``; their sequence state must survive until their
+    restore arrives;
+  * ``step_cost(plan)`` is pure (no device work, no side effects):
+    virtual-time consumers (the DES) charge it instead of executing;
+  * ``execute`` returns a ``StepResult`` whose ``tokens`` cover every
+    decode id and every request whose prefill completed this step.
 """
 from __future__ import annotations
 

@@ -8,6 +8,9 @@ decode step runs the ``kernels/paged_decode_attention`` pallas kernel
 (interpret mode on this CPU-only container) over exactly those pages.
 Prefill chunks write their K/V into the request's pages; shared prefix
 pages are written once and attended by every request that locks them.
+A second host-memory pool backs swap-to-host preemption: the plan's
+swap_outs/restores directives physically copy pages between the tiers,
+so a swapped request resumes decode against bit-identical KV.
 
 The surrogate keeps the compute honest where the paper needs it — the
 per-step batch really is assembled from the plan, the gather really is
@@ -39,10 +42,12 @@ def _pow2_at_least(n: int, lo: int) -> int:
 
 class JaxBackend:
     def __init__(self, *, block_size: int, num_blocks: int,
+                 num_swap_blocks: int = 0,
                  n_heads: int = 4, n_kv_heads: int = 2, head_dim: int = 16,
                  vocab: int = 256, seed: int = 0, interpret: bool = True):
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.num_swap_blocks = num_swap_blocks
         self.n_heads = n_heads
         self.n_kv_heads = n_kv_heads
         self.head_dim = head_dim
@@ -67,6 +72,15 @@ class JaxBackend:
         self.k_pages = np.zeros(
             (n_kv_heads, num_blocks, block_size, head_dim), np.float32)
         self.v_pages = np.zeros_like(self.k_pages)
+        # host swap tier: pages parked here by plan.swap_outs, copied back
+        # by plan.restores (ids from the scheduler's HostSwapSpace)
+        if num_swap_blocks > 0:
+            self.k_swap = np.zeros(
+                (n_kv_heads, num_swap_blocks, block_size, head_dim),
+                np.float32)
+            self.v_swap = np.zeros_like(self.k_swap)
+        else:
+            self.k_swap = self.v_swap = None
         # req_id -> tokens in cache, LRU-bounded: the one-way broadcast ring
         # never tells workers about finished requests, so entries that stop
         # appearing in plans age out (actives are bounded by max_num_seqs,
@@ -74,6 +88,9 @@ class JaxBackend:
         self._seq_lens: "collections.OrderedDict[int, int]" = \
             collections.OrderedDict()
         self._max_tracked = 4096
+        # rids parked in the host tier: their _seq_lens entry must survive
+        # arbitrary churn until the restore arrives (base.Backend contract)
+        self._swap_pinned: set = set()
         self._attend_cache: Dict = {}
         self._last_wall = 0.0
 
@@ -102,8 +119,14 @@ class JaxBackend:
     def _track(self, rid: int, seq_len: int) -> None:
         self._seq_lens[rid] = seq_len
         self._seq_lens.move_to_end(rid)
-        while len(self._seq_lens) > self._max_tracked:
-            self._seq_lens.popitem(last=False)
+        scanned = 0
+        while (len(self._seq_lens) > self._max_tracked
+               and scanned < self._max_tracked):
+            old, v = self._seq_lens.popitem(last=False)
+            scanned += 1
+            if old in self._swap_pinned:
+                self._seq_lens[old] = v     # parked on host: keep (re-queued
+                self._seq_lens.move_to_end(old)   # at the hot end)
 
     # -- the batched attention step ------------------------------------------
 
@@ -172,7 +195,25 @@ class JaxBackend:
         tables = block_tables if block_tables is not None \
             else plan.block_tables
         for rid in plan.preempted:
-            self._seq_lens.pop(rid, None)     # pages were reclaimed
+            # pages were reclaimed; also unpins a swap whose restore was
+            # cancelled by a same-step recompute preemption
+            self._seq_lens.pop(rid, None)
+            self._swap_pinned.discard(rid)
+        # swap directives first, in contract order (base.Backend): a device
+        # block freed by a swap-out may be reallocated — even as a restore
+        # target — within this very plan.  Swapped requests keep their
+        # _seq_lens entry (pinned against LRU churn): their sequence
+        # survives, only its pages move.
+        for rid, pairs in plan.swap_outs.items():
+            self._swap_pinned.add(rid)
+            for dev_b, host_b in pairs:
+                self.k_swap[:, host_b] = self.k_pages[:, dev_b]
+                self.v_swap[:, host_b] = self.v_pages[:, dev_b]
+        for rid, pairs in plan.restores.items():
+            self._swap_pinned.discard(rid)
+            for host_b, dev_b in pairs:
+                self.k_pages[:, dev_b] = self.k_swap[:, host_b]
+                self.v_pages[:, dev_b] = self.v_swap[:, host_b]
 
         rows: List[tuple] = []                # (rid, q_token, seq_len, table)
         for rid, start, n in plan.prefill:
@@ -217,3 +258,4 @@ class JaxBackend:
         """Forget a finished request's bookkeeping (pages are owned by the
         scheduler's block manager, nothing to free here)."""
         self._seq_lens.pop(req_id, None)
+        self._swap_pinned.discard(req_id)

@@ -6,12 +6,15 @@ coefficients are derived from the dry-run roofline terms — so control-plane
 experiments see realistic device-step durations per architecture.
 
 step_time = t_fixed + prefill_tokens * t_prefill_tok + n_decode * t_decode_seq
-          + block_table_entries * t_block_entry
+          + block_table_entries * t_block_entry + swapped_blocks * t_swap_block
 
 The block-table term models the per-step metadata upload PagedAttention
 adds: every entry of every scheduled request's table is consumed by the
 device each step, so batch growth costs more than the three-coefficient
-seed model admitted.
+seed model admitted.  The swap term charges host<->device KV block copies
+(swap-to-host preemption + restore, docs/preemption.md): per block moved
+in either direction, at interconnect bandwidth — the quantity the
+adaptive preemption policy trades against recompute FLOPs.
 """
 from __future__ import annotations
 
@@ -26,6 +29,7 @@ class DeviceModel:
     t_prefill_tok: float = 2e-6     # per prefill token
     t_decode_seq: float = 1e-4      # per decoding sequence
     t_block_entry: float = 2e-8     # per KV block-table entry in the plan
+    t_swap_block: float = 5e-5      # per KV block copied host<->device
     max_step: float = 1.0
 
     def step_time(self, plan: StepPlan) -> float:
@@ -33,8 +37,15 @@ class DeviceModel:
         n_entries = sum(len(t) for t in plan.block_tables.values())
         t = (self.t_fixed + pre * self.t_prefill_tok
              + len(plan.decode) * self.t_decode_seq
-             + n_entries * self.t_block_entry)
+             + n_entries * self.t_block_entry
+             + plan.n_swapped_blocks * self.t_swap_block)
         return min(t, self.max_step)
+
+    def preemption_calibration(self) -> dict:
+        """SchedulerConfig kwargs so the adaptive preemption policy prices
+        swap round-trips vs recompute with THIS device's coefficients."""
+        return {"t_swap_block": self.t_swap_block,
+                "t_recompute_token": self.t_prefill_tok}
 
     @classmethod
     def from_roofline(cls, bound_s_prefill: float, prefill_tokens: int,

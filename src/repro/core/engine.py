@@ -64,6 +64,10 @@ class EngineConfig:
         entries = min(s.num_kv_blocks, 4096 * s.max_num_seqs)
         est = (4096 + 10 * s.max_tokens_per_step
                + 9 * (entries + 16 * s.max_num_seqs))
+        # swap directives: ~16 B per (src, dst) block pair, each direction
+        # bounded by the host tier (a plan cannot move more blocks than
+        # the swap space holds)
+        est += 32 * min(entries, s.num_swap_blocks)
         size = 1 << 16
         while size < est:
             size *= 2

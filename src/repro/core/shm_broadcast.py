@@ -18,8 +18,26 @@ Layout (8-byte little-endian words):
      seq | payload_len | ack[0..n_readers)
   payload region: n_slots x slot_bytes raw bytes.
 
-A slot holding message ``seq`` may be overwritten only after every reader's
-ack counter for that slot reached ``seq`` (one full lap behind).
+Ring slot lifecycle (the invariants both sides rely on):
+
+  * a message with sequence number ``seq`` lives in slot ``seq % n_slots``
+    — placement is deterministic, readers never search;
+  * the writer publishes payload-then-seq: it copies the payload and
+    length into the slot FIRST and stores the slot's ``seq`` word last,
+    so a reader that observes ``seq`` is guaranteed a complete payload
+    (no torn reads without locks);
+  * a reader consumes seq-then-ack: it spins until the slot's ``seq``
+    matches the message it expects, copies the payload out, and only then
+    advances its ack counter — acking is the one-way "I will never read
+    this slot at this lap again" signal;
+  * the writer may overwrite a slot holding ``seq`` only after EVERY
+    reader's ack for that slot reached ``seq`` (one full lap behind):
+    slow readers exert backpressure by parking the writer in a spin, and
+    messages are never dropped or skipped;
+  * each reader sees every message exactly once, in order — the ring is
+    broadcast, not work-stealing; sequence numbers only grow, and the
+    ack rule above makes falling a lap behind impossible by
+    construction, so neither side checks for it at runtime.
 """
 from __future__ import annotations
 

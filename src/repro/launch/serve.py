@@ -41,6 +41,16 @@ def main() -> None:
                     help="KV capacity in token slots (default: 4M emulated; "
                          "64K for --backend jax, whose page pool is dense)")
     ap.add_argument("--block-size", type=int, default=64)
+    ap.add_argument("--preemption-policy", default="recompute",
+                    choices=("recompute", "swap", "adaptive"),
+                    help="what happens to a victim's computed KV under "
+                         "memory pressure (docs/preemption.md): recompute "
+                         "drops + re-prefills it, swap parks it in host "
+                         "memory, adaptive picks per request from the "
+                         "device model's swap-bandwidth calibration")
+    ap.add_argument("--swap-capacity", type=int, default=0,
+                    help="host swap tier size in token slots "
+                         "(default: same as --kv-capacity)")
     ap.add_argument("--ring-slot-bytes", type=int, default=0,
                     help="override the auto-sized broadcast slot")
     ap.add_argument("--devmodel", default=None,
@@ -60,14 +70,19 @@ def main() -> None:
                              t_decode_seq=2e-5)
     cfg = EngineConfig(
         tp_degree=args.tp, pool_width=args.pool_width,
-        scheduler=SchedulerConfig(kv_capacity_tokens=args.kv_capacity,
-                                  block_size=args.block_size),
+        scheduler=SchedulerConfig(
+            kv_capacity_tokens=args.kv_capacity,
+            block_size=args.block_size,
+            preemption_policy=args.preemption_policy,
+            swap_capacity_tokens=args.swap_capacity or args.kv_capacity,
+            **device.preemption_calibration()),
         device=device, backend=args.backend,
         ring_slot_bytes=args.ring_slot_bytes,
         yield_every=args.yield_every, async_sched=args.async_sched,
     )
     print(f"[serve] tp={args.tp} cores={got} pool={args.pool_width} "
-          f"backend={args.backend} async_sched={args.async_sched}")
+          f"backend={args.backend} async_sched={args.async_sched} "
+          f"preemption={args.preemption_policy}")
     text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
 
     sys_ = ServingSystem(cfg).start()

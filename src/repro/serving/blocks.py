@@ -13,9 +13,35 @@ is registered in ``_cache``.  A later request whose prompt matches locks
 (increfs) those blocks and skips their prefill.  Blocks whose refcount
 drops to zero but that are still registered move to an LRU *evictable*
 list: they keep their contents and can be re-locked for free, but are
-reclaimed (hash dropped) when allocation would otherwise fail.  This
-replaces the seed's ``_PrefixTrie`` grow-forever hash set — the cache can
-never reference more KV than physically exists.
+reclaimed (hash dropped) when allocation would otherwise fail.  Because
+the cache is backed by real blocks (not a grow-forever hash index), it
+can never reference more KV than physically exists.
+
+A second, host-memory tier (``HostSwapSpace``) backs swap-to-host
+preemption: a preempted request's computed blocks are copied out of the
+device pool into bounded host blocks (``swap_out``) and copied back into
+freshly allocated device blocks on re-admission (``swap_in``).  The
+manager only does the bookkeeping and emits (src, dst) block pairs; the
+``repro.backend`` executors perform the actual page copies (see
+docs/preemption.md for the full lifecycle).
+
+Refcount rules (the invariants every caller relies on):
+
+  * every block id returned by ``allocate``/``lock_prefix`` carries
+    exactly one reference owned by the caller, released with ``free`` —
+    alloc/free are symmetric by construction, shared prefix blocks are
+    refcounted and never double-freed;
+  * a refcount never goes negative (``free`` asserts), and
+    ``free_blocks + used_blocks == num_blocks`` holds after every
+    public call;
+  * refcount-0 registered blocks are *evictable*, not free: contents
+    survive until ``allocate`` reclaims them LRU-first;
+  * ``swap_out`` moves a request's device references to host references
+    atomically (all blocks or none); host references are dropped by
+    ``swap_in`` or ``swap_release``, never both;
+  * device copies of swapped-out cached blocks are demoted to the cold
+    end of the LRU — they are the cheapest eviction candidates since
+    the host tier also holds their contents.
 
 The manager is pure control-plane bookkeeping (no tensors); the
 ``repro.backend`` executors index their physical caches with the block
@@ -27,6 +53,57 @@ import collections
 from typing import Dict, List, Optional, Sequence, Tuple
 
 
+class HostSwapSpace:
+    """Bounded host-memory block pool — the swap tier for preempted KV.
+
+    Pure accounting, mirroring ``BlockManager``: host block ids index the
+    backends' host pools the way device block ids index their page pools.
+    Ownership is per-request (a swapped request's blocks are released as
+    one unit on swap-in or abort), so there is no refcounting here — host
+    blocks are never shared.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: collections.deque = collections.deque(range(num_blocks))
+        self._owner: Dict[int, List[int]] = {}   # req_id -> host block ids
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def swapped_requests(self) -> int:
+        return len(self._owner)
+
+    def can_hold(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def allocate(self, req_id: int, n: int) -> Optional[List[int]]:
+        """Reserve ``n`` host blocks for ``req_id`` (all-or-nothing)."""
+        assert req_id not in self._owner, f"req {req_id} already swapped"
+        if n > len(self._free):
+            return None
+        got = [self._free.popleft() for _ in range(n)]
+        self._owner[req_id] = got
+        return got
+
+    def blocks_of(self, req_id: int) -> List[int]:
+        return self._owner[req_id]
+
+    def release(self, req_id: int) -> List[int]:
+        """Return ``req_id``'s host blocks to the pool."""
+        got = self._owner.pop(req_id)
+        self._free.extend(got)
+        return got
+
+
 def chain_key(prev_key: int, block_tokens: Sequence[int]) -> int:
     """Chained block hash: O(n) per prompt, not O(n^2/block) full tuples."""
     return hash((prev_key, tuple(block_tokens)))
@@ -34,11 +111,13 @@ def chain_key(prev_key: int, block_tokens: Sequence[int]) -> int:
 
 class BlockManager:
     def __init__(self, num_blocks: int, block_size: int, *,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True,
+                 swap_space: Optional[HostSwapSpace] = None):
         assert num_blocks > 0 and block_size > 0
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.enable_prefix_cache = enable_prefix_cache
+        self.swap_space = swap_space
         self._free: collections.deque = collections.deque(range(num_blocks))
         self._ref: List[int] = [0] * num_blocks
         self._hash_of: List[Optional[int]] = [None] * num_blocks
@@ -155,3 +234,48 @@ class BlockManager:
                     self._evictable.move_to_end(b)
                 else:
                     self._free.append(b)
+
+    # -- swap tier -----------------------------------------------------------
+
+    def swap_out(self, req_id: int,
+                 block_table: Sequence[int]) -> Optional[List[Tuple[int, int]]]:
+        """Move ``req_id``'s device references to the host tier.
+
+        Reserves one host block per device block (all-or-nothing; None
+        when the host pool cannot hold the table), drops the device
+        references, and returns the ``(device_block, host_block)`` copy
+        directives the backends execute *before* any block reuse in the
+        same step.  Device blocks this request had registered in the
+        prefix cache stay evictable — but are demoted to the cold (LRU)
+        end, since their contents now also live on host."""
+        if self.swap_space is None:
+            return None
+        host = self.swap_space.allocate(req_id, len(block_table))
+        if host is None:
+            return None
+        pairs = list(zip(block_table, host))
+        self.free(block_table)
+        for b in block_table:
+            if b in self._evictable:       # cheapest eviction candidate now
+                self._evictable.move_to_end(b, last=False)
+        return pairs
+
+    def swap_in(self, req_id: int) -> Optional[List[Tuple[int, int]]]:
+        """Bring a swapped request back: allocate fresh device blocks for
+        its host blocks and release the host tier.  Returns the
+        ``(host_block, device_block)`` restore directives (None — with no
+        side effects — when the device pool cannot fit the table; the
+        caller retries on a later step)."""
+        assert self.swap_space is not None
+        host = self.swap_space.blocks_of(req_id)
+        dev = self.allocate(len(host))
+        if dev is None:
+            return None
+        self.swap_space.release(req_id)
+        return list(zip(host, dev))
+
+    def swap_release(self, req_id: int) -> None:
+        """Drop a swapped request's host blocks without restoring (abort /
+        client timeout while swapped)."""
+        assert self.swap_space is not None
+        self.swap_space.release(req_id)

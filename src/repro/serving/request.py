@@ -15,6 +15,8 @@ class RequestState(enum.Enum):
     WAITING = "waiting"            # tokenized, queued in EngineCore
     PREFILLING = "prefilling"      # chunked prefill in progress
     DECODING = "decoding"
+    SWAPPED = "swapped"            # KV parked in the host tier (preempted
+                                   # by swap, awaiting re-admission)
     FINISHED = "finished"
     TIMED_OUT = "timed_out"
 
@@ -37,6 +39,9 @@ class Request:
     kv_slots: int = 0              # token slots occupied in block_table
     block_hashes: List[int] = dataclasses.field(default_factory=list)
     n_preemptions: int = 0         # times evicted + recomputed under pressure
+    # swap-to-host state (preemption_policy swap/adaptive)
+    host_block_table: List[int] = dataclasses.field(default_factory=list)
+    n_swaps: int = 0               # times swapped to the host tier
 
     # timeline (perf_counter seconds)
     t_arrival: float = 0.0

@@ -11,8 +11,16 @@ whole-sequence capture cannot remove the CPU from the loop — paper §II-A③):
   * KV is managed at block granularity by ``repro.serving.blocks``: every
     request carries a block table, admission/growth allocate blocks, and
     when allocation fails the most recently admitted running request is
-    *preempted by recompute* (blocks freed, request requeued at the head —
-    its next prefill usually resumes cheaply from the prefix cache);
+    *preempted* — by recompute (blocks freed, requeued at the head; its
+    next prefill usually resumes cheaply from the prefix cache), by
+    swap-to-host (blocks copied to the bounded ``HostSwapSpace`` tier and
+    restored on re-admission), or adaptively per request, comparing the
+    recompute cost of its computed tokens against the calibrated
+    swap-bandwidth cost (``SchedulerConfig.preemption_policy``, see
+    docs/preemption.md);
+  * swapped requests are re-admitted ahead of fresh prefill work as soon
+    as device blocks free up — the plan carries their (host, device)
+    restore directives so the backends copy the pages back;
   * refcounted prefix-cache blocks let identical prompt prefixes skip
     prefill work (attackers in the paper's experiment send identical
     prompts — vLLM's prefix caching is on by default, so we model it too).
@@ -29,8 +37,10 @@ import dataclasses
 import json
 from typing import Dict, List, Optional, Tuple
 
-from repro.serving.blocks import BlockManager, chain_key
+from repro.serving.blocks import BlockManager, HostSwapSpace, chain_key
 from repro.serving.request import Request, RequestState
+
+PREEMPTION_POLICIES = ("recompute", "swap", "adaptive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,10 +51,39 @@ class SchedulerConfig:
     enable_prefix_cache: bool = True
     kv_capacity_tokens: int = 1 << 22  # total KV slots across the batch
     block_size: int = 64               # KV tokens per page
+    # what to do with a victim's computed KV when allocation fails:
+    #   recompute — free it, re-prefill on re-admission (vLLM default);
+    #   swap      — copy blocks to the host tier, restore on re-admission;
+    #   adaptive  — per request: swap iff the modeled round-trip transfer
+    #               is cheaper than re-prefilling its computed tokens.
+    preemption_policy: str = "recompute"
+    swap_capacity_tokens: int = 1 << 22   # host tier size (swap/adaptive)
+    # adaptive cost calibration (seconds) — wire these from DeviceModel
+    # (t_swap_block, t_prefill_tok) so the decision matches the device
+    # the swap actually runs on; defaults match DeviceModel's defaults
+    t_swap_block: float = 5e-5         # host<->device copy per block
+    t_recompute_token: float = 2e-6    # re-prefill per computed token
+    # hysteresis: swap only when the round trip is this many times cheaper
+    # than recompute.  Transfers serialize the device step (no overlap in
+    # this stack) and a swapped request pins host blocks while it waits,
+    # so a marginal modeled win is a measured loss.
+    swap_margin: float = 2.0
+
+    def __post_init__(self):
+        if self.preemption_policy not in PREEMPTION_POLICIES:
+            raise ValueError(
+                f"preemption_policy={self.preemption_policy!r} "
+                f"(want one of {PREEMPTION_POLICIES})")
 
     @property
     def num_kv_blocks(self) -> int:
         return max(1, self.kv_capacity_tokens // self.block_size)
+
+    @property
+    def num_swap_blocks(self) -> int:
+        if self.preemption_policy == "recompute":
+            return 0
+        return max(1, self.swap_capacity_tokens // self.block_size)
 
 
 @dataclasses.dataclass
@@ -53,17 +92,32 @@ class StepPlan:
     step_id: int
     prefill: List[Tuple[int, int, int]]   # (req_id, start, length)
     decode: List[int]                      # req_ids generating 1 token
-    preempted: List[int]                   # req_ids evicted this step
+    preempted: List[int]                   # req_ids whose state the workers
+                                           # must drop: recompute-evicted or
+                                           # aborted while swapped
     block_tables: Dict[int, List[int]] = dataclasses.field(
         default_factory=dict)              # req_id -> KV block ids
     new_tokens: Dict[int, List[int]] = dataclasses.field(
         default_factory=dict)              # req_id -> input token ids
+    # swap directives — backends MUST apply swap_outs, then restores,
+    # before any prefill/decode writes of the same step (a freed device
+    # block may be reallocated within this very plan):
+    swap_outs: Dict[int, List[Tuple[int, int]]] = dataclasses.field(
+        default_factory=dict)              # req_id -> [(device_blk, host_blk)]
+    restores: Dict[int, List[Tuple[int, int]]] = dataclasses.field(
+        default_factory=dict)              # req_id -> [(host_blk, device_blk)]
     _raw: Optional[bytes] = dataclasses.field(
         default=None, repr=False, compare=False)
 
     @property
     def n_tokens(self) -> int:
         return sum(l for _, _, l in self.prefill) + len(self.decode)
+
+    @property
+    def n_swapped_blocks(self) -> int:
+        """Blocks crossing the host<->device boundary this step."""
+        return (sum(len(p) for p in self.swap_outs.values())
+                + sum(len(p) for p in self.restores.values()))
 
     def encode(self) -> bytes:
         if self._raw is None:
@@ -74,6 +128,8 @@ class StepPlan:
                 "preempted": self.preempted,
                 "block_tables": self.block_tables,
                 "new_tokens": self.new_tokens,
+                "swap_outs": self.swap_outs,
+                "restores": self.restores,
             }).encode()
         return self._raw
 
@@ -83,7 +139,11 @@ class StepPlan:
         return cls(d["step"], [tuple(p) for p in d["prefill"]],
                    d["decode"], d["preempted"],
                    {int(k): v for k, v in d.get("block_tables", {}).items()},
-                   {int(k): v for k, v in d.get("new_tokens", {}).items()})
+                   {int(k): v for k, v in d.get("new_tokens", {}).items()},
+                   {int(k): [tuple(p) for p in v]
+                    for k, v in d.get("swap_outs", {}).items()},
+                   {int(k): [tuple(p) for p in v]
+                    for k, v in d.get("restores", {}).items()})
 
     @property
     def payload_bytes(self) -> int:
@@ -97,9 +157,11 @@ class StepPlan:
             return len(self._raw)
         n_bt = sum(len(t) for t in self.block_tables.values())
         n_nt = sum(len(t) for t in self.new_tokens.values())
-        return (64 + 18 * len(self.prefill) + 8 * len(self.decode)
+        return (96 + 18 * len(self.prefill) + 8 * len(self.decode)
                 + 8 * len(self.preempted) + 7 * n_bt + 9 * n_nt
-                + 12 * (len(self.block_tables) + len(self.new_tokens)))
+                + 12 * (len(self.block_tables) + len(self.new_tokens))
+                + 14 * self.n_swapped_blocks
+                + 12 * (len(self.swap_outs) + len(self.restores)))
 
 
 class Scheduler:
@@ -107,10 +169,18 @@ class Scheduler:
         self.cfg = cfg
         self.waiting: List[Request] = []
         self.running: List[Request] = []
+        self.swapped: List[Request] = []   # swapped out, FIFO re-admission
+        # aborted-while-swapped rids awaiting a state-drop notice to the
+        # workers (shipped via the next broadcast plan's ``preempted``)
+        self._dropped_while_swapped: List[int] = []
         self.step_id = 0
+        swap = None
+        if cfg.num_swap_blocks > 0:
+            swap = HostSwapSpace(cfg.num_swap_blocks, cfg.block_size)
         self.blocks = BlockManager(
             cfg.num_kv_blocks, cfg.block_size,
-            enable_prefix_cache=cfg.enable_prefix_cache)
+            enable_prefix_cache=cfg.enable_prefix_cache,
+            swap_space=swap)
 
     # -- queue management ----------------------------------------------------
 
@@ -164,26 +234,81 @@ class Scheduler:
         req.kv_slots = 0
         req.kv_allocated = 0
 
-    def _preempt(self, victim: Request, plan: StepPlan) -> int:
-        """Preemption by recompute: evict ``victim``'s KV and requeue it at
-        the head of the waiting queue.  Returns the token budget to refund
-        (the victim may already hold slots in this very plan).  On
-        re-admission its prefill restarts at 0 but typically resumes from
-        the prefix cache — its own computed blocks are evictable, not gone,
-        until memory pressure actually reclaims them.  (KV of already
-        *generated* tokens is dropped without re-prefill cost: a negligible
-        emulation optimism, decode tails are tiny next to prompts.)"""
+    def _drop_from_plan(self, victim: Request, plan: StepPlan) -> int:
+        """Remove ``victim``'s scheduled work from ``plan``; returns the
+        token budget to refund (the victim may already hold slots in this
+        very plan)."""
         refund = 0
         if victim.req_id in plan.decode:
             plan.decode.remove(victim.req_id)
             refund += 1
+            victim.kv_slots -= 1
         kept = []
         for entry in plan.prefill:
             if entry[0] == victim.req_id:
                 refund += entry[2]
+                # this chunk will never execute: roll back the progress
+                # recorded when it was planned (swap preserves ``prefilled``
+                # across eviction, so phantom progress would skip tokens)
+                victim.prefilled -= entry[2]
+                victim.kv_slots -= entry[2]
             else:
                 kept.append(entry)
         plan.prefill = kept
+        return refund
+
+    def _choose_preemption(self, victim: Request, plan: StepPlan) -> str:
+        """Pick recompute vs swap for this victim (cfg.preemption_policy).
+
+        Falls back to recompute when swap is impossible: no host tier,
+        host pool full, nothing computed yet, or the victim was restored
+        in this very plan (its device pages would be copied out *before*
+        the restore that fills them — backends apply swap_outs first)."""
+        swap = self.blocks.swap_space
+        if (swap is None or not victim.block_table
+                or victim.req_id in plan.restores
+                or not swap.can_hold(len(victim.block_table))):
+            return "recompute"
+        if self.cfg.preemption_policy == "swap":
+            return "swap"
+        # adaptive: round-trip transfer vs re-prefilling the computed
+        # prompt tokens.  Tokens in blocks the victim has registered in
+        # the prefix cache are priced at zero: its blocks turn evictable,
+        # not free, so re-admission usually re-locks them (optimistic —
+        # sustained pressure can reclaim them first, docs/preemption.md).
+        # Recompute also drops generated-token KV for free, the same
+        # emulation optimism _preempt_recompute documents.
+        resumable = (len(victim.block_hashes) * self.cfg.block_size
+                     if self.cfg.enable_prefix_cache else 0)
+        swap_cost = 2 * len(victim.block_table) * self.cfg.t_swap_block
+        recompute_cost = (max(victim.prefilled - resumable, 0)
+                          * self.cfg.t_recompute_token)
+        return ("swap" if swap_cost * self.cfg.swap_margin < recompute_cost
+                else "recompute")
+
+    def _preempt(self, victim: Request, plan: StepPlan) -> int:
+        """Evict ``victim`` under the configured policy; returns the token
+        budget refund from work it already held in this plan."""
+        refund = self._drop_from_plan(victim, plan)
+        if self._choose_preemption(victim, plan) == "swap":
+            self._preempt_swap(victim, plan)
+        else:
+            self._preempt_recompute(victim, plan)
+        return refund
+
+    def _preempt_recompute(self, victim: Request, plan: StepPlan) -> None:
+        """Preemption by recompute: drop ``victim``'s KV and requeue it at
+        the head of the waiting queue.  On re-admission its prefill
+        restarts at 0 but typically resumes from the prefix cache — its
+        own computed blocks are evictable, not gone, until memory pressure
+        actually reclaims them.  (KV of already *generated* tokens is
+        dropped without re-prefill cost: a negligible emulation optimism,
+        decode tails are tiny next to prompts.)"""
+        if victim.req_id in plan.restores:
+            # restored and re-evicted within one step: cancel the restore
+            # (host blocks were already released at swap-in, so the
+            # computed state is genuinely gone — full recompute)
+            del plan.restores[victim.req_id]
         self._release_blocks(victim)
         victim.prefilled = 0
         victim.block_hashes = []       # recomputed blocks re-register
@@ -192,7 +317,23 @@ class Scheduler:
         self.running.remove(victim)
         self.waiting.insert(0, victim)
         plan.preempted.append(victim.req_id)
-        return refund
+
+    def _preempt_swap(self, victim: Request, plan: StepPlan) -> None:
+        """Preemption by swap: copy ``victim``'s blocks to the host tier
+        (directives ride the plan; backends copy before any reuse) and
+        park it on the swapped queue.  Its computed state — prefilled
+        count, block hashes, generated tokens — survives; re-admission
+        restores the pages instead of recomputing them."""
+        pairs = self.blocks.swap_out(victim.req_id, victim.block_table)
+        assert pairs is not None       # _choose_preemption checked capacity
+        plan.swap_outs[victim.req_id] = pairs
+        victim.host_block_table = [h for _, h in pairs]
+        victim.block_table = []
+        victim.kv_allocated = 0        # kv_slots kept: sized for swap_in
+        victim.state = RequestState.SWAPPED
+        victim.n_swaps += 1
+        self.running.remove(victim)
+        self.swapped.append(victim)
 
     def _allocate_with_preemption(self, req: Request, n_tokens: int,
                                   plan: StepPlan) -> Tuple[bool, int]:
@@ -228,6 +369,17 @@ class Scheduler:
                 self._release_blocks(req)
                 self.running.remove(req)
                 dead.append(req)
+        for req in list(self.swapped):
+            if not req.t_first_token and now - req.t_arrival > timeout:
+                req.state = RequestState.TIMED_OUT
+                self.blocks.swap_release(req.req_id)
+                req.host_block_table = []
+                req.kv_slots = 0
+                self.swapped.remove(req)
+                # workers pinned this rid's state at swap-out; tell them to
+                # drop it on the next broadcast plan
+                self._dropped_while_swapped.append(req.req_id)
+                dead.append(req)
         return dead
 
     # -- the per-step decision -------------------------------------------------
@@ -238,6 +390,31 @@ class Scheduler:
         cfg = self.cfg
         budget = cfg.max_tokens_per_step
         plan = StepPlan(self.step_id, [], [], [])
+
+        # 0. re-admit swapped requests (FIFO) ahead of ALL fresh work: their
+        # computed KV is sunk transfer cost, and restoring is pure copy
+        # bandwidth — it consumes device blocks but no token budget.  A
+        # restored request rejoins ``running`` in its pre-swap state
+        # (derived from prefill progress) and is scheduled below like any
+        # other running request, after its restore directives.  Re-admission
+        # never preempts: if the table doesn't fit, it waits.
+        while self.swapped and len(self.running) < cfg.max_num_seqs:
+            req = self.swapped[0]
+            pairs = self.blocks.swap_in(req.req_id)
+            if pairs is None:
+                break                  # device pool full; retry next step
+            self.swapped.pop(0)
+            plan.restores[req.req_id] = pairs
+            req.host_block_table = []
+            req.block_table = [dev for _, dev in pairs]
+            req.kv_allocated = len(pairs) * cfg.block_size
+            req.state = (RequestState.PREFILLING if req.prefill_remaining > 0
+                         else RequestState.DECODING)
+            # to the FRONT of running: preemption victims are picked from
+            # the tail (most recently admitted), and a restored request is
+            # among the oldest admissions — parking it at the tail would
+            # make it the next victim and thrash the swap tier
+            self.running.insert(0, req)
 
         # 1. decodes first (latency priority, one token each).  Iterating a
         # snapshot: _preempt may drop later entries, whose state flips to
@@ -303,9 +480,16 @@ class Scheduler:
                 # n == 0 only for empty prompts: straight to decode
                 req.state = RequestState.DECODING
 
-        if not plan.prefill and not plan.decode:
+        if (not plan.prefill and not plan.decode
+                and not plan.swap_outs and not plan.restores):
             self.step_id -= 1
             return None
+
+        # deferred state-drop notices (aborted while swapped) ride the
+        # first plan that actually ships — kept queued until one does
+        if self._dropped_while_swapped:
+            plan.preempted.extend(self._dropped_while_swapped)
+            self._dropped_while_swapped.clear()
 
         # 4. attach the per-request block tables + input ids the workers
         # need — the part of the payload that grows with the batch.
@@ -374,4 +558,4 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.running or self.swapped)

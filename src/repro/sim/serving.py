@@ -277,24 +277,46 @@ class ServingModel:
         )
 
 
+def victim_stats(res: WorkloadResult, timeout: float) -> dict:
+    """Victim-latency summary shared by the attacker/victim benchmarks
+    (fig7 and preemption_policy must aggregate identically)."""
+    tt = res.victim_ttfts()
+    done = [t for t in tt if t is not None and t < timeout]
+    return {
+        "victim_ttfts": [round(t, 2) if t is not None else None for t in tt],
+        "first_victim_ttft": round(tt[0], 2) if tt and tt[0] else None,
+        "mean_completed_ttft": (round(sum(done) / len(done), 2)
+                                if done else None),
+        "timeouts": sum(1 for t in tt if t is None or t >= timeout),
+    }
+
+
 def llama8b_tp4_params(n_cores: int, tp: int = 4,
-                       pool_width: int = 64) -> ServingParams:
+                       pool_width: int = 64,
+                       preemption_policy: str = "recompute",
+                       kv_capacity_tokens: int = 2_300_000) -> ServingParams:
     """Paper-scale preset: Llama-3.1-8B, TP=4, H100/Blackwell-class devices.
 
     Device coefficients from first principles: prefill 2N FLOPs/token over
     4 chips at ~40% MFU -> ~1e-5 s/token; decode is weight-bandwidth-bound
-    -> ~2 ms floor; KV capacity ~2.3M tokens (4x80GB minus weights).
-    Host costs from sim/calibrate.py scaled to a Rust-class tokenizer.
+    -> ~2 ms floor; KV capacity ~2.3M tokens (4x80GB minus weights);
+    swapping a 64-token KV block (~8 MB for 8B-class KV) over ~25 GB/s of
+    effective PCIe -> ~3e-4 s/block.  Host costs from sim/calibrate.py
+    scaled to a Rust-class tokenizer.
     """
+    device = DeviceModel(t_fixed=2e-3, t_prefill_tok=1e-5,
+                         t_decode_seq=2e-5, t_swap_block=3e-4, max_step=2.0)
     return ServingParams(
         n_cores=n_cores, tp=tp, pool_width=pool_width,
         tok_rate=200_000.0,
-        device=DeviceModel(t_fixed=2e-3, t_prefill_tok=1e-5,
-                           t_decode_seq=2e-5, max_step=2.0),
+        device=device,
         scheduler=SchedulerConfig(max_num_seqs=64,
                                   max_tokens_per_step=8192,
                                   prefill_chunk=2048,
-                                  kv_capacity_tokens=2_300_000),
+                                  kv_capacity_tokens=kv_capacity_tokens,
+                                  preemption_policy=preemption_policy,
+                                  swap_capacity_tokens=kv_capacity_tokens,
+                                  **device.preemption_calibration()),
     )
 
 
@@ -303,16 +325,23 @@ def attacker_victim_workload(params: ServingParams, *, attacker_rps: float,
                              victim_tokens: int = 2_800,
                              duration: float = 30.0,
                              victim_new_tokens: int = 8,
+                             attacker_new_tokens: int = 4,
                              victim_start: float = 1.0,
                              victim_spacing: float = 2.0,
                              distinct_attackers: bool = True,
                              horizon: float = 400.0) -> WorkloadResult:
-    """The paper's §IV-B experiment: periodic attackers + sequential victims."""
+    """The paper's §IV-B experiment: periodic attackers + sequential victims.
+
+    ``attacker_new_tokens`` sets how long each attacker camps in decode
+    holding its KV: the paper's CPU-contention runs use short tails (4),
+    while the preemption-policy comparison raises it so the resident batch
+    outgrows the pool and the KV-capacity cliff is actually reached."""
     model = ServingModel(params)
     t = 0.0
     i = 0
     while t < duration:
-        model.add_request(t, attacker_tokens, max_new_tokens=4,
+        model.add_request(t, attacker_tokens,
+                          max_new_tokens=attacker_new_tokens,
                           stream=(1 + i) if distinct_attackers else 1)
         i += 1
         t = i / attacker_rps

@@ -1,4 +1,10 @@
-"""Paged KV block manager invariants (incl. hypothesis property tests)."""
+"""Paged KV block manager invariants (incl. hypothesis property tests).
+
+Covers both tiers: the device pool (refcounts, prefix cache, LRU
+eviction, preemption-by-recompute) and the host swap tier
+(swap_out/swap_in round trips, per-request ownership, leak checks on
+drain and on timeout-while-swapped).
+"""
 from __future__ import annotations
 
 import pytest
@@ -8,7 +14,7 @@ try:
 except ImportError:  # container ships no hypothesis — deterministic sweep
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.serving.blocks import BlockManager, chain_key
+from repro.serving.blocks import BlockManager, HostSwapSpace, chain_key
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
@@ -168,6 +174,201 @@ def test_preemption_round_trip_never_leaks(lens, max_new):
         assert r.block_table == [] and r.kv_slots == 0
     assert sched.blocks.free_blocks == initial
     assert sched.kv_used == 0
+
+
+def _swap_cfg(cap_tokens: int, swap_tokens: int, policy: str = "swap",
+              **kw) -> SchedulerConfig:
+    return SchedulerConfig(max_tokens_per_step=256, prefill_chunk=64,
+                           enable_prefix_cache=False, block_size=8,
+                           kv_capacity_tokens=cap_tokens,
+                           preemption_policy=policy,
+                           swap_capacity_tokens=swap_tokens, **kw)
+
+
+def _assert_no_leaks(sched: Scheduler) -> None:
+    assert sched.blocks.free_blocks == sched.blocks.num_blocks
+    assert sched.kv_used == 0
+    swap = sched.blocks.swap_space
+    if swap is not None:
+        assert swap.used_blocks == 0 and swap.swapped_requests == 0
+
+
+# -- host swap tier ----------------------------------------------------------
+
+
+def test_host_swap_space_accounting():
+    hs = HostSwapSpace(6, 8)
+    a = hs.allocate(1, 4)
+    assert len(a) == 4 and hs.free_blocks == 2 and hs.used_blocks == 4
+    assert not hs.can_hold(3) and hs.can_hold(2)
+    assert hs.allocate(2, 3) is None            # all-or-nothing
+    assert hs.free_blocks == 2
+    assert hs.blocks_of(1) == a
+    assert hs.release(1) == a
+    assert hs.free_blocks == 6 and hs.swapped_requests == 0
+
+
+def test_manager_swap_out_in_round_trip():
+    hs = HostSwapSpace(8, 4)
+    bm = BlockManager(8, 4, enable_prefix_cache=False, swap_space=hs)
+    table = bm.allocate(3)
+    pairs = bm.swap_out(7, table)
+    assert [d for d, _ in pairs] == table
+    assert bm.free_blocks == 8                  # device refs dropped
+    assert hs.used_blocks == 3
+    back = bm.swap_in(7)
+    assert [h for h, _ in back] == [h for _, h in pairs]   # same host blocks
+    assert hs.used_blocks == 0 and bm.used_blocks == 3
+    bm.free([d for _, d in back])
+    assert bm.free_blocks == 8
+
+
+def test_swap_out_all_or_nothing_when_host_pool_small():
+    hs = HostSwapSpace(2, 4)
+    bm = BlockManager(8, 4, enable_prefix_cache=False, swap_space=hs)
+    table = bm.allocate(3)
+    assert bm.swap_out(1, table) is None        # 3 > 2 host blocks
+    assert bm.used_blocks == 3 and hs.used_blocks == 0   # nothing moved
+    bm.free(table)
+
+
+def test_swapped_out_cached_blocks_evict_first():
+    """Device copies of swapped-out registered blocks move to the cold end
+    of the LRU: the host tier also holds them, so they are the cheapest
+    blocks to reclaim."""
+    hs = HostSwapSpace(8, 4)
+    bm = BlockManager(4, 4, swap_space=hs)
+    other = bm.allocate(1)
+    bm.register(chain_key(0, [9, 9, 9, 9]), other[0])
+    bm.free(other)                              # evictable, most recent
+    mine = bm.allocate(1)
+    bm.register(chain_key(0, [1, 2, 3, 4]), mine[0])
+    bm.swap_out(5, mine)                        # demoted past `other`
+    got = bm.allocate(3)                        # 2 free + evict one
+    assert mine[0] in got and other[0] not in got
+    bm.free(got)
+
+
+def test_scheduler_swap_preemption_drains_without_leaks():
+    """Under pressure with the swap policy, victims park in the host tier,
+    re-admit ahead of fresh prefill, and the workload drains with both
+    tiers fully returned."""
+    cfg = _swap_cfg(cap_tokens=260, swap_tokens=520)
+    sched = Scheduler(cfg)
+    reqs = [_req(n, max_new=24, stream=i + 1)
+            for i, n in enumerate([180, 170, 160])]
+    for r in reqs:
+        sched.add_request(r)
+    drain(sched, max_steps=50_000)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert all(len(r.generated) == 24 for r in reqs)
+    assert sum(r.n_swaps for r in reqs) >= 1, "expected swap preemption"
+    assert all(r.host_block_table == [] for r in reqs)
+    _assert_no_leaks(sched)
+
+
+def test_swap_falls_back_to_recompute_when_host_pool_full():
+    """A host tier too small for any victim's table degrades swap to
+    recompute instead of deadlocking."""
+    cfg = _swap_cfg(cap_tokens=260, swap_tokens=16)   # 2 host blocks only
+    sched = Scheduler(cfg)
+    reqs = [_req(n, max_new=24, stream=i + 1)
+            for i, n in enumerate([180, 170, 160])]
+    for r in reqs:
+        sched.add_request(r)
+    drain(sched, max_steps=50_000)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert sum(r.n_preemptions for r in reqs) >= 1
+    _assert_no_leaks(sched)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    lens=st.lists(st.integers(8, 200), min_size=2, max_size=6),
+    max_new=st.integers(1, 24),
+    policy=st.integers(0, 1),
+)
+def test_swap_round_trip_never_leaks(lens, max_new, policy):
+    """Property version of the swap acceptance test: under a pool sized
+    for ~1.5 requests, any workload drains under swap/adaptive with every
+    request finished and BOTH tiers fully returned (the host-tier
+    extension of test_preemption_round_trip_never_leaks)."""
+    cap = max(lens) + max_new + 64
+    cfg = _swap_cfg(cap_tokens=cap, swap_tokens=2 * cap,
+                    policy=("swap", "adaptive")[policy],
+                    # price swap as always-cheaper so adaptive exercises
+                    # the swap path too (recompute fallbacks still occur
+                    # when the host pool fills)
+                    t_swap_block=1e-9, t_recompute_token=1e-3)
+    sched = Scheduler(cfg)
+    initial = sched.blocks.free_blocks
+    reqs = [_req(n, max_new=max_new, stream=i + 1)
+            for i, n in enumerate(lens)]
+    for r in reqs:
+        sched.add_request(r)
+    drain(sched, max_steps=50_000)
+    for r in reqs:
+        assert r.state == RequestState.FINISHED, (r.req_id, r.state)
+        assert len(r.generated) == max_new
+        assert r.block_table == [] and r.kv_slots == 0
+        assert r.host_block_table == []
+    assert sched.blocks.free_blocks == initial
+    _assert_no_leaks(sched)
+
+
+def test_adaptive_policy_prices_swap_vs_recompute():
+    """Adaptive picks per victim from the calibrated costs: free transfers
+    -> swap; ruinous transfers -> recompute."""
+    reqs_spec = [(180, 24), (170, 24), (160, 24)]
+
+    def run_with(t_swap_block, t_recompute_token):
+        cfg = _swap_cfg(cap_tokens=260, swap_tokens=520, policy="adaptive",
+                        t_swap_block=t_swap_block,
+                        t_recompute_token=t_recompute_token)
+        sched = Scheduler(cfg)
+        reqs = [_req(n, max_new=m, stream=i + 1)
+                for i, (n, m) in enumerate(reqs_spec)]
+        for r in reqs:
+            sched.add_request(r)
+        drain(sched, max_steps=50_000)
+        assert all(r.state == RequestState.FINISHED for r in reqs)
+        _assert_no_leaks(sched)
+        return (sum(r.n_swaps for r in reqs),
+                sum(r.n_preemptions for r in reqs))
+
+    swaps, _ = run_with(t_swap_block=1e-9, t_recompute_token=1e-3)
+    assert swaps >= 1
+    swaps, recomputes = run_with(t_swap_block=1e3, t_recompute_token=1e-9)
+    assert swaps == 0 and recomputes >= 1
+
+
+def test_expire_while_swapped_releases_host_blocks():
+    cfg = _swap_cfg(cap_tokens=260, swap_tokens=520)
+    sched = Scheduler(cfg)
+    reqs = [_req(n, max_new=24, stream=i + 1)
+            for i, n in enumerate([180, 170, 160])]
+    for r in reqs:
+        sched.add_request(r)
+    # step until someone is parked in the host tier
+    for step in range(200):
+        plan = sched.schedule()
+        if plan is None or sched.swapped:
+            break
+        sched.complete_step(plan, float(step))
+    assert sched.swapped, "expected a swapped request under this pressure"
+    swapped_ids = [r.req_id for r in sched.swapped]
+    for r in reqs:          # shield everyone else from the timeout below
+        if r.req_id not in swapped_ids:
+            r.t_first_token = r.t_first_token or 1.0
+    dead = sched.expire(now=1e9, timeout=1.0)
+    assert any(r.state == RequestState.TIMED_OUT for r in dead)
+    assert sched.blocks.swap_space.used_blocks == 0
+    assert not sched.swapped
+    # the workers pinned these rids at swap-out: the next shipped plan
+    # must carry the state-drop notice
+    plan = sched.schedule()
+    assert plan is not None
+    assert set(swapped_ids) <= set(plan.preempted)
 
 
 def test_preempted_request_resumes_from_prefix_cache():

@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown inline link ``[text](target)`` whose target is not
+external (http/https/mailto) or a pure in-page anchor.  Relative targets
+must resolve to an existing file or directory from the linking file's
+directory; a ``#fragment`` suffix is allowed (the file part is checked,
+anchors are not).  Also checks backtick-quoted repo paths in the docs
+tables (``src/...``, ``benchmarks/...``, ``artifacts/`` excepted — those
+are build outputs).
+
+Stdlib only; run from anywhere: ``python tools/check_docs_links.py``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_PATH_RE = re.compile(
+    r"`((?:src|benchmarks|docs|tools|examples|tests)/[A-Za-z0-9_./-]+)`")
+EXTERNAL = ("http://", "https://", "mailto:")
+# build outputs referenced as "expected artifact" — not required to exist
+GENERATED_PREFIXES = ("artifacts/",)
+
+
+def md_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    targets = []
+    for m in LINK_RE.finditer(text):
+        targets.append((m.group(1), "link"))
+    for m in CODE_PATH_RE.finditer(text):
+        if "*" in m.group(1):          # glob patterns like fig*.py
+            continue
+        targets.append((m.group(1), "path"))
+    for target, kind in targets:
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        path_part = target.split("#", 1)[0]
+        if not path_part or path_part.startswith(GENERATED_PREFIXES):
+            continue
+        base = md.parent if kind == "link" else REPO
+        resolved = (base / path_part).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(REPO)}: broken {kind} "
+                          f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for md in md_files():
+        errors.extend(check_file(md))
+    for e in errors:
+        print(f"ERROR {e}")
+    n_files = len(md_files())
+    if errors:
+        print(f"{len(errors)} broken intra-repo link(s) across "
+              f"{n_files} file(s)")
+        return 1
+    print(f"ok: intra-repo links resolve in {n_files} markdown file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
