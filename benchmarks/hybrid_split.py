@@ -1,0 +1,180 @@
+"""Split-phase offload crossover: hybrid (CPU decode) vs unified execution.
+
+When does routing decode to the CPU tier while prefill saturates the
+accelerator (repro.backend.hybrid, arXiv:2504.11750 / 2603.12831) beat
+unified execution?  The DES answer: a unified step pays
+``prefill + decode`` serially on one device; a hybrid step pays
+``max(prefill, cpu_decode)`` plus a one-time page handoff per finished
+prompt.  So the split wins exactly when steps are prefill-heavy enough
+that decode hides behind prefill — and loses when decode-only steps
+dominate (the slower CPU tier is then on the critical path) or when the
+CPU decode is so slow it outgrows the prefill it hides behind.
+
+The sweep crosses the two knobs that move that boundary:
+
+  * decode-CPU speed — ``DeviceModel.cpu_tier(decode_slowdown=s)`` for
+    s in SLOWDOWNS (DDR-vs-HBM-class bandwidth ratios);
+  * load — attacker request rate: higher RPS keeps long prefills
+    resident in every step, which is precisely the regime where decode
+    rides along free on the CPU tier.
+
+Fixed to a tightly-coupled CPU-GPU part (GH200-class ~400 GB/s fabric:
+an 8 MB KV block crosses in ~2e-5 s — the arXiv:2504.11750 class of
+hardware that makes phase-splitting attractive at all): the handoff
+crosses that fabric once per request at prefill completion.  On
+PCIe-class parts the handoff tax alone (~16% of the prefill cost of the
+same tokens) buries the decode savings — run with ``T_SWAP_BLOCK =
+3e-4`` to see offload lose everywhere, the same shape
+benchmarks/preemption_policy.py measures for swap.  The sweep stays
+below the KV-capacity cliff on purpose (default recompute policy, no
+preemption traffic), so the crossover isolates pure split economics —
+the hybrid's tier-aware victim pricing under pressure is
+docs/preemption.md territory.
+
+Reports per (load × slowdown) the victim mean TTFT and its delta vs the
+unified baseline of the same load, plus the **crossover**: the largest
+decode slowdown at which offload still wins that load.  Measured shape:
+the heavier the load, the lower the crossover (heavy: wins up to ~8x,
+then the CPU tier lands on the critical path); light load is parity to
+within per-step-overhead noise — occasionally a *slower* decode tier
+"wins" a couple of ms by batching more work per step and amortizing the
+fixed control-plane cost, which is why wins below 2 ms are not counted.
+Artifact: artifacts/hybrid_split.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.sim.serving import (attacker_victim_workload, llama8b_tp4_params,
+                               victim_stats, with_hybrid_decode)
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+ATTACKER_TOKENS = 4_000
+ATTACKER_NEW_TOKENS = 256                # long tails: a real decode batch
+VICTIM_TOKENS = 2_800
+MAX_NUM_SEQS = 256                       # resident decode batch worth hiding
+T_SWAP_BLOCK = 2e-5                      # tightly-coupled fabric, s/block
+
+SLOWDOWNS = (2.0, 4.0, 8.0, 16.0, 32.0)  # CPU decode vs accelerator decode
+LOADS = {"light": 4.0, "medium": 12.0, "heavy": 20.0}   # attacker RPS
+
+
+def _params(slowdown: float | None, *, cores: int = 9, tp: int = 4):
+    """slowdown None -> unified baseline; else hybrid split at that
+    CPU-decode speed."""
+    p = llama8b_tp4_params(cores, tp=tp)
+    device = dataclasses.replace(p.device, t_swap_block=T_SWAP_BLOCK)
+    sched = dataclasses.replace(p.scheduler, max_num_seqs=MAX_NUM_SEQS,
+                                **device.preemption_calibration())
+    p = dataclasses.replace(p, device=device, scheduler=sched)
+    if slowdown is not None:
+        p = with_hybrid_decode(p, decode_slowdown=slowdown)
+    return p
+
+
+def one_cell(load: str, rps: float, slowdown: float | None, *,
+             duration: float = 20.0) -> dict:
+    p = _params(slowdown)
+    res = attacker_victim_workload(
+        p, attacker_rps=rps, attacker_tokens=ATTACKER_TOKENS,
+        n_victims=4, victim_tokens=VICTIM_TOKENS,
+        attacker_new_tokens=ATTACKER_NEW_TOKENS,
+        duration=duration, horizon=duration + 240.0)
+    ttfts = [r.ttft for r in res.requests if r.ttft is not None]
+    done = [r for r in res.requests if r.t_done]
+    return {
+        "load": load, "rps": rps,
+        "mode": "unified" if slowdown is None else "hybrid",
+        "decode_slowdown": slowdown,
+        **victim_stats(res, p.timeout),
+        # whole-fleet view: the split shifts attacker latency too
+        "all_mean_ttft": (round(sum(ttfts) / len(ttfts), 4)
+                          if ttfts else None),
+        "completed": len(done),
+        "makespan": (round(max(r.t_done for r in done), 1)
+                     if done else None),
+        "steps": res.sched_costs,
+        "sim_time": round(res.sim_time, 1),
+    }
+
+
+def run(write: bool = True, fast: bool = False) -> dict:
+    loads = {"heavy": LOADS["heavy"]} if fast else LOADS
+    slowdowns = (4.0, 16.0) if fast else SLOWDOWNS
+    duration = 8.0 if fast else 15.0
+    cells, crossovers = [], []
+    for load, rps in loads.items():
+        base = one_cell(load, rps, None, duration=duration)
+        cells.append(base)
+        for s in slowdowns:
+            c = one_cell(load, rps, s, duration=duration)
+            # fleet-wide mean TTFT decides the crossover (victim-only
+            # means are ~0 in uncongested cells); victim stats ride along.
+            # A "win" is a strict > 2 ms improvement — at light load the
+            # two modes tie to within per-step-overhead noise (nothing to
+            # hide decode behind, nothing to lose either), and a tie is
+            # parity, not an offload victory.
+            b, h = base["all_mean_ttft"], c["all_mean_ttft"]
+            c["mean_ttft_delta_s"] = (None if (b is None or h is None)
+                                      else round(h - b, 3))
+            c["offload_wins"] = (c["mean_ttft_delta_s"] is not None
+                                 and (h - b) < -2e-3
+                                 and c["timeouts"] <= base["timeouts"])
+            cells.append(c)
+        wins = [c["decode_slowdown"] for c in cells
+                if c["load"] == load and c["mode"] == "hybrid"
+                and c["offload_wins"]]
+        # the crossover: the contiguous winning run containing the
+        # smallest winning slowdown — past its top end the CPU decode no
+        # longer hides behind prefill and unified execution wins again
+        best_win = None
+        if wins:
+            best_win = wins[0]
+            for s in slowdowns:
+                if s < wins[0]:
+                    continue
+                if s in wins:
+                    best_win = s
+                else:
+                    break
+        crossovers.append({
+            "load": load, "rps": rps,
+            "winning_slowdowns": wins,
+            "max_winning_slowdown": best_win,
+        })
+    out = {"cells": cells, "crossover": crossovers,
+           "t_swap_block": T_SWAP_BLOCK,
+           "attacker_tokens": ATTACKER_TOKENS}
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "hybrid_split.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def main(fast: bool = False) -> None:
+    out = run(fast=fast)
+    print("load,rps,mode,slowdown,victim_mean_ttft,all_mean_ttft,"
+          "timeouts,completed,steps,delta_vs_unified")
+    for c in out["cells"]:
+        print(f"{c['load']},{c['rps']},{c['mode']},"
+              f"{c['decode_slowdown'] if c['decode_slowdown'] else '-'},"
+              f"{c['mean_completed_ttft']},{c['all_mean_ttft']},"
+              f"{c['timeouts']},{c['completed']},{c['steps']},"
+              f"{c.get('mean_ttft_delta_s', '-')}")
+    print("-- offload crossover (largest CPU-decode slowdown where the "
+          "split still beats unified) --")
+    for x in out["crossover"]:
+        win = x["max_winning_slowdown"]
+        print(f"{x['load']:7s} rps={x['rps']:>4}: "
+              + (f"offload wins up to {win}x slower CPU decode "
+                 f"(winning slowdowns: {x['winning_slowdowns']})"
+                 if win else "no strict offload win at any swept slowdown "
+                             "(parity or unified ahead)"))
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast=("--fast" in sys.argv) or ("--quick" in sys.argv))

@@ -64,6 +64,11 @@ def main() -> None:
              "analogue)")
     fusion_ablation.main()
 
+    from benchmarks import hybrid_split
+    _section("beyond-paper: split-phase CPU-decode offload crossover "
+             "(hybrid vs unified)")
+    hybrid_split.main(fast=fast)
+
     from benchmarks import roofline_report
     _section("roofline table (from dry-run artifacts)")
     roofline_report.main()

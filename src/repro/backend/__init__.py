@@ -1,38 +1,89 @@
 """Pluggable execution backends: plan in, StepResult out.
 
 ``make_backend`` is the single construction seam used by the engine
-workers and the launch drivers; ``JaxBackend`` is imported lazily so the
-default emulated path never pulls jax into forked worker processes.
+workers and the launch drivers; the physical backends (jax, cpu) are
+imported lazily so the default emulated path never pulls heavy deps
+into forked worker processes.  The catalogue — what each backend is for
+and how they compose — lives in docs/backends.md.
 """
 from __future__ import annotations
 
 from repro.backend.base import Backend, StepResult
 from repro.backend.emulated import EmulatedBackend
 
-__all__ = ["Backend", "EmulatedBackend", "JaxBackend", "StepResult",
-           "make_backend"]
+__all__ = ["Backend", "BACKEND_NAMES", "CpuDecodeBackend", "EmulatedBackend",
+           "HybridBackend", "JaxBackend", "StepResult", "make_backend"]
+
+BACKEND_NAMES = ("emulated", "jax", "cpu", "hybrid")
 
 
 def __getattr__(name):
     if name == "JaxBackend":
         from repro.backend.jax_backend import JaxBackend
         return JaxBackend
+    if name == "CpuDecodeBackend":
+        from repro.backend.cpu_decode import CpuDecodeBackend
+        return CpuDecodeBackend
+    if name == "HybridBackend":
+        from repro.backend.hybrid import HybridBackend
+        return HybridBackend
     raise AttributeError(name)
 
 
-def make_backend(name: str, *, device=None, scheduler_cfg=None):
-    """Build a backend by name ("emulated" | "jax").
+def make_backend(name: str, *, device=None, scheduler_cfg=None,
+                 prefill_backend: str = "emulated",
+                 decode_backend: str = "emulated",
+                 decode_slowdown: float = 8.0):
+    """Build a backend by name (one of ``BACKEND_NAMES``).
 
     ``device`` feeds the emulated sleep model; ``scheduler_cfg`` sizes the
-    jax page pool (its block ids must match the scheduler's manager)."""
+    physical page pools (their block ids must match the scheduler's
+    manager).  For ``"hybrid"``, ``prefill_backend``/``decode_backend``
+    name the two children; an emulated decode child gets the device's
+    ``cpu_tier(decode_slowdown=...)`` cost model (accelerator-class
+    prefill, CPU-class decode — docs/backends.md), and the handoff is
+    priced at the prefill device's swap bandwidth."""
+    from repro.core.devmodel import DeviceModel
+    from repro.serving.scheduler import SchedulerConfig
+    device = device if device is not None else DeviceModel()
+    cfg = scheduler_cfg if scheduler_cfg is not None else SchedulerConfig()
     if name == "emulated":
-        from repro.core.devmodel import DeviceModel
-        return EmulatedBackend(device if device is not None else DeviceModel())
+        return EmulatedBackend(device)
     if name == "jax":
         from repro.backend.jax_backend import JaxBackend
-        from repro.serving.scheduler import SchedulerConfig
-        cfg = scheduler_cfg if scheduler_cfg is not None else SchedulerConfig()
         return JaxBackend(block_size=cfg.block_size,
                           num_blocks=cfg.num_kv_blocks,
                           num_swap_blocks=cfg.num_swap_blocks)
-    raise ValueError(f"unknown backend {name!r} (want 'emulated' or 'jax')")
+    if name == "cpu":
+        from repro.backend.cpu_decode import CpuDecodeBackend
+        return CpuDecodeBackend(block_size=cfg.block_size,
+                                num_blocks=cfg.num_kv_blocks,
+                                num_swap_blocks=cfg.num_swap_blocks)
+    if name == "hybrid":
+        from repro.backend.hybrid import HybridBackend
+        if "hybrid" in (prefill_backend, decode_backend):
+            raise ValueError("hybrid children must be leaf backends")
+        physical = {"jax", "cpu"}
+        if (prefill_backend in physical) != (decode_backend in physical):
+            # an emulated child computes no KV: pairing it with a physical
+            # child silently yields tokens decoded from an all-zero pool
+            # (emulated prefill) or a placeholder-0 stream after the first
+            # token (emulated decode) — reject rather than mislead
+            raise ValueError(
+                f"hybrid children must be both physical (jax/cpu) or both "
+                f"emulated, got prefill={prefill_backend!r} "
+                f"decode={decode_backend!r}")
+
+        def child(child_name: str, role: str):
+            if child_name == "emulated":
+                dev = (device.cpu_tier(decode_slowdown=decode_slowdown)
+                       if role == "decode" else device)
+                return EmulatedBackend(dev)
+            return make_backend(child_name, device=device,
+                                scheduler_cfg=cfg)
+
+        return HybridBackend(child(prefill_backend, "prefill"),
+                             child(decode_backend, "decode"),
+                             t_handoff_block=device.t_swap_block)
+    raise ValueError(f"unknown backend {name!r} "
+                     f"(want one of {BACKEND_NAMES})")

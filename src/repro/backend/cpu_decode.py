@@ -1,0 +1,55 @@
+"""CPU decode backend: the paged surrogate on a pure-NumPy attention path.
+
+The CPU-class physical backend for split-phase serving (arXiv:2504.11750,
+arXiv:2603.12831): the same paged page-pool layout, swap tier, and greedy
+sampling as ``JaxBackend`` — the shared ``PagedSurrogateBackend`` supplies
+all of it — but ``_attend`` is a NumPy gather-then-softmax instead of the
+pallas kernel, so it runs anywhere the scheduler does, with zero jax
+imports.  It mirrors ``kernels.paged_decode_attention_reference`` term
+for term in float32, so its argmax samples match the kernel's and a
+request's decode can move between the two backends mid-flight
+(``HybridBackend`` relies on exactly this).
+
+Standalone it is a complete backend (it prefills too — a slow-class
+device, not a decode-only shard); under ``HybridBackend`` it typically
+receives only the decode sub-plan.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.backend.surrogate import PagedSurrogateBackend
+
+
+class CpuDecodeBackend(PagedSurrogateBackend):
+
+    def _attend(self, q: np.ndarray, tables: np.ndarray,
+                seq_lens: np.ndarray) -> np.ndarray:
+        """q: [rows, H, D] -> logits [rows, vocab], NumPy gather-softmax.
+
+        Mirrors ``paged_decode_attention_reference``: gather each row's
+        pages, mask positions beyond seq_len (and -1 pad entries), online
+        softmax in float32, project through the shared output head."""
+        rows, H, D = q.shape
+        KV = self.n_kv_heads
+        r = H // KV
+        nb_max = max(tables.shape[1], 1)
+        blk = self.block_size
+        pages = np.clip(tables, 0, self.num_blocks - 1)       # [rows, nb]
+        k = self.k_pages[:, pages]                 # [KV, rows, nb, blk, D]
+        v = self.v_pages[:, pages]
+        k = np.moveaxis(k, 1, 0).reshape(rows, KV, nb_max * blk, D)
+        v = np.moveaxis(v, 1, 0).reshape(rows, KV, nb_max * blk, D)
+        qg = q.reshape(rows, KV, r, D)
+        s = np.einsum("bgrd,bgsd->bgrs", qg, k,
+                      dtype=np.float32) / np.float32(D ** 0.5)
+        pos = np.arange(nb_max * blk)[None, :]
+        valid = (pos < seq_lens[:, None]) & np.repeat(
+            tables >= 0, blk, axis=1)
+        s = np.where(valid[:, None, None, :], s, np.float32(-1e30))
+        m = np.max(s, axis=-1, keepdims=True)
+        p = np.exp(s - m)
+        l = np.sum(p, axis=-1, keepdims=True)
+        out = np.einsum("bgrs,bgsd->bgrd", p / np.where(l == 0, 1.0, l), v)
+        flat = out.reshape(rows, H * D).astype(np.float32)
+        return flat @ self._wo

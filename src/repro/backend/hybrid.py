@@ -1,0 +1,237 @@
+"""Split-phase execution: prefill on one backend, decode on another.
+
+The paper's finding is that the CPU side starves accelerators — but the
+same CPUs are idle, cheap compute that phase-split serving can exploit:
+prefill is compute-bound and belongs on the accelerator, decode is
+bandwidth-bound and latency-tolerant enough to piggyback on the CPU
+while prefill saturates the device (arXiv:2504.11750, arXiv:2603.12831).
+``HybridBackend`` is that split behind the ordinary ``Backend`` seam: it
+owns two child backends, splits every ``StepPlan`` into a prefill
+sub-plan and a decode sub-plan, executes them on their tiers, and merges
+the two ``StepResult``s — the scheduler never knows.
+
+Mechanics (each a contract obligation, see docs/backends.md):
+
+  * **Phase routing** — ``plan.prefill`` entries go to the prefill
+    (accelerator) child, ``plan.decode`` ids to the decode (CPU) child.
+    Each sub-plan carries only its own block tables / input ids;
+    ``plan.preempted`` fans out to BOTH children (either may hold state).
+  * **KV residency** — a request's pages live with the tier that computes
+    it.  The hybrid tracks residency per request; at the prefill->decode
+    transition (``plan.prefill_done``, tagged by the scheduler) the
+    request's pages are block-copied from the prefill child's pool into
+    the decode child's pool at the SAME block ids — both children size
+    their pools from the one scheduler ``BlockManager``, so ids are
+    valid on either side.  The handoff *copies*, never moves: prefix
+    pages registered in the scheduler's cache stay readable on the
+    prefill tier for later requests that lock them.
+  * **Swap routing** — ``swap_outs`` / ``restores`` go to the child that
+    owns the request's KV (its residency tier); the host block ids come
+    from the scheduler's single ``HostSwapSpace``, so a host block is
+    only ever used by one tier at a time.  Residency survives the swap:
+    a request swapped out of the decode tier restores into it.
+  * **Ordering** — each child applies swap_outs -> restores -> compute
+    within its sub-plan (the base contract); the two pools are disjoint
+    physical memories, so cross-tier reuse of a freed block id cannot
+    corrupt pages.
+  * **Cost model** — ``step_cost`` is the virtual-time story: the tiers
+    run concurrently, so a step costs ``max(prefill_cost, decode_cost)``
+    plus ``t_handoff_block`` per page crossing at a prefill completion.
+    It is pure (contract), so phases are derived from the plan itself:
+    scheduled work is exact, swap victims carry the scheduler's phase
+    tag (``plan.decode_tier_swaps`` — so a decode-tier victim's swap-out
+    is billed at the tier whose bandwidth priced the eviction), and only
+    directives with neither fall back to last-known residency.
+
+Children may be physical (``JaxBackend``, ``CpuDecodeBackend`` — pages
+really move, tokens stay identical to unified execution) or emulated
+(``EmulatedBackend`` pairs with heterogeneous ``DeviceModel``s — the DES
+uses this to sweep CPU-decode speed, see benchmarks/hybrid_split.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.backend.base import PinnedLRU, StepResult
+from repro.backend.emulated import EmulatedBackend
+from repro.serving.scheduler import StepPlan
+
+PREFILL, DECODE = "prefill", "decode"
+
+
+def _sub_plan_has_work(p: StepPlan) -> bool:
+    return bool(p.prefill or p.decode or p.swap_outs or p.restores)
+
+
+class HybridBackend:
+
+    def __init__(self, prefill_backend, decode_backend, *,
+                 t_handoff_block: float = 5e-5):
+        self.prefill_backend = prefill_backend
+        self.decode_backend = decode_backend
+        self.t_handoff_block = t_handoff_block
+        # req_id -> tier currently holding its KV pages (base.PinnedLRU:
+        # the broadcast ring never announces finishes); swapped requests
+        # are pinned — their tier label must survive until the restore
+        # routes their pages home.
+        self._swap_pinned: set = set()
+        self._tier = PinnedLRU(pinned=self._swap_pinned)
+        self.n_handoffs = 0
+        self.n_handoff_blocks = 0
+
+    # -- residency -----------------------------------------------------------
+
+    def _tier_of(self, plan: StepPlan, rid: int) -> str:
+        """Tier for ``rid`` in ``plan``: scheduled work is authoritative
+        (decode list -> decode tier, prefill entries -> prefill tier);
+        decode-phase swap traffic — victims dropped from both lists
+        before eviction, restores rotated out by the decode cap — carries
+        the scheduler's phase tag (``plan.decode_tier_swaps``), so those
+        copies are routed and billed against the tier that priced them
+        (``t_swap_block_decode``); anything else falls back to last-known
+        residency.  Pure: reads but never writes, so step_cost can share
+        it."""
+        if rid in plan.decode or rid in plan.decode_tier_swaps:
+            return DECODE
+        if any(rid == e[0] for e in plan.prefill):
+            return PREFILL
+        return self._tier.get(rid, PREFILL)
+
+    def _remember(self, rid: int, tier: str) -> None:
+        self._tier.put(rid, tier)
+
+    # -- plan splitting ------------------------------------------------------
+
+    def split_plan(self, plan: StepPlan,
+                   tables: Optional[Dict[int, List[int]]] = None
+                   ) -> Tuple[StepPlan, StepPlan]:
+        """Split ``plan`` into (prefill sub-plan, decode sub-plan).
+
+        Pure with respect to backend state (residency is read, not
+        updated) — both ``step_cost`` and ``execute`` route through this,
+        and tests drive it directly."""
+        tables = tables if tables is not None else plan.block_tables
+        pre = StepPlan(plan.step_id, list(plan.prefill), [],
+                       list(plan.preempted))
+        dec = StepPlan(plan.step_id, [], list(plan.decode),
+                       list(plan.preempted))
+        for rid, _, _ in plan.prefill:
+            if rid in tables:
+                pre.block_tables[rid] = tables[rid]
+            if rid in plan.new_tokens:
+                pre.new_tokens[rid] = plan.new_tokens[rid]
+        for rid in plan.decode:
+            if rid in tables:
+                dec.block_tables[rid] = tables[rid]
+            if rid in plan.new_tokens:
+                dec.new_tokens[rid] = plan.new_tokens[rid]
+        for rid, pairs in plan.swap_outs.items():
+            target = pre if self._tier_of(plan, rid) == PREFILL else dec
+            target.swap_outs[rid] = pairs
+        for rid, pairs in plan.restores.items():
+            target = pre if self._tier_of(plan, rid) == PREFILL else dec
+            target.restores[rid] = pairs
+        return pre, dec
+
+    def _handoff_blocks(self, plan: StepPlan,
+                        tables: Dict[int, List[int]]) -> int:
+        return sum(len(tables.get(rid, [])) for rid in plan.prefill_done)
+
+    # -- Backend protocol ----------------------------------------------------
+
+    def step_cost(self, plan: StepPlan) -> float:
+        """Concurrent tiers: max of the two sub-plan costs, plus the
+        prefill->decode page handoff at interconnect cost.  Pure."""
+        pre, dec = self.split_plan(plan)
+        pre_c = (self.prefill_backend.step_cost(pre)
+                 if _sub_plan_has_work(pre) else 0.0)
+        dec_c = (self.decode_backend.step_cost(dec)
+                 if _sub_plan_has_work(dec) else 0.0)
+        moved = self._handoff_blocks(plan, plan.block_tables)
+        return max(pre_c, dec_c) + moved * self.t_handoff_block
+
+    def execute(self, plan: StepPlan,
+                block_tables: Optional[Dict[int, List[int]]] = None
+                ) -> StepResult:
+        tables = block_tables if block_tables is not None \
+            else plan.block_tables
+        for rid in plan.preempted:
+            self._tier.pop(rid, None)
+            self._swap_pinned.discard(rid)
+        pre, dec = self.split_plan(plan, tables)
+        for rid in pre.swap_outs:
+            self._swap_pinned.add(rid)
+        for rid in dec.swap_outs:
+            self._swap_pinned.add(rid)
+        for rid in list(pre.restores) + list(dec.restores):
+            self._swap_pinned.discard(rid)
+
+        # In-process execution is serial, but the tiers it models run
+        # concurrently: sleeping emulated children would charge the live
+        # engine prefill + decode as a SUM, contradicting step_cost's
+        # max().  Suppress their sleeps and sleep the modeled concurrent
+        # wall once, below.  (Physical children really compute, so their
+        # serial in-process time is interpret-mode fidelity, not a
+        # latency claim — the engine ignores wall_s either way.)
+        sleepers = [c for c in (self.prefill_backend, self.decode_backend)
+                    if isinstance(c, EmulatedBackend) and c.sleep]
+        for c in sleepers:
+            c.sleep = False
+        res_pre = res_dec = None
+        try:
+            if _sub_plan_has_work(pre) or pre.preempted:
+                res_pre = self.prefill_backend.execute(pre)
+            if _sub_plan_has_work(dec) or dec.preempted:
+                res_dec = self.decode_backend.execute(dec)
+        finally:
+            for c in sleepers:
+                c.sleep = True
+
+        # record residency for work scheduled this step (after execution:
+        # split/_tier_of must see the PRE-step view while routing)
+        for rid, _, _ in plan.prefill:
+            self._remember(rid, PREFILL)
+        for rid in plan.decode:
+            self._remember(rid, DECODE)
+
+        # prefill->decode handoff: block-copy the finished request's pages
+        # into the decode tier (same ids — one BlockManager numbers both
+        # pools) and transfer its sequence length, then forget it on the
+        # prefill side.  Copy, not move: prefix pages must stay readable
+        # on the prefill tier for later requests that lock them.
+        moved = 0
+        src, dst = self.prefill_backend, self.decode_backend
+        physical = hasattr(src, "k_pages") and hasattr(dst, "k_pages")
+        for rid in plan.prefill_done:
+            blocks = tables.get(rid, [])
+            if physical and blocks:
+                dst.k_pages[:, blocks] = src.k_pages[:, blocks]
+                dst.v_pages[:, blocks] = src.v_pages[:, blocks]
+                dst._track(rid, src._seq_lens.get(rid, 0))
+            if hasattr(src, "release"):
+                src.release(rid)
+            moved += len(blocks)
+            self.n_handoffs += 1
+            self._remember(rid, DECODE)
+        self.n_handoff_blocks += moved
+
+        tokens: Dict[int, int] = {}
+        if res_pre is not None:
+            tokens.update(res_pre.tokens)
+        if res_dec is not None:
+            tokens.update(res_dec.tokens)
+        wall = (max(res_pre.wall_s if res_pre else 0.0,
+                    res_dec.wall_s if res_dec else 0.0)
+                + moved * self.t_handoff_block)
+        if sleepers:
+            time.sleep(wall)       # the concurrent-tier wall, charged once
+        return StepResult(step_id=plan.step_id, tokens=tokens, wall_s=wall)
+
+    def release(self, req_id: int) -> None:
+        """Forget a finished request on both tiers."""
+        for child in (self.prefill_backend, self.decode_backend):
+            if hasattr(child, "release"):
+                child.release(req_id)
+        self._tier.pop(req_id, None)
+        self._swap_pinned.discard(req_id)

@@ -1,0 +1,206 @@
+"""Shared paged-KV surrogate model for the physical backends.
+
+Every *physical* backend in this stack (one that owns pages, as opposed
+to the cost-only ``EmulatedBackend``) shares the same memory system: a
+deliberately tiny transformer surrogate — fixed random projections from
+token embeddings to Q/K/V and to logits — whose KV lives in a page pool
+``[KV, num_blocks, block_size, D]`` addressed through the block tables
+the scheduler broadcasts, plus a host-memory pool that backs
+swap-to-host preemption.  ``PagedSurrogateBackend`` implements all of
+that once — pool ownership, swap directive application in contract
+order, per-request sequence tracking, batch assembly, greedy sampling —
+and leaves a single seam, ``_attend``, for subclasses to fill:
+
+  * ``JaxBackend``        — the paged pallas kernel (accelerator class);
+  * ``CpuDecodeBackend``  — a NumPy gather-softmax (CPU class).
+
+Because both subclasses run the same float32 math over the same pages,
+they sample identical tokens for identical plans — which is what lets
+``HybridBackend`` hand a request's pages from one to the other at the
+prefill->decode transition without changing the completion stream
+(tests/test_backend_conformance.py pins this).
+
+Sized for in-process use: construct with the scheduler's ``block_size`` /
+``num_kv_blocks`` (keep ``kv_capacity_tokens`` small — the pool is dense).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.backend.base import PinnedLRU, StepResult
+from repro.serving.scheduler import StepPlan
+
+
+def _pow2_at_least(n: int, lo: int) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+class PagedSurrogateBackend:
+    """Base for backends that own physical pages (see module docstring)."""
+
+    def __init__(self, *, block_size: int, num_blocks: int,
+                 num_swap_blocks: int = 0,
+                 n_heads: int = 4, n_kv_heads: int = 2, head_dim: int = 16,
+                 vocab: int = 256, seed: int = 0, interpret: bool = True):
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.num_swap_blocks = num_swap_blocks
+        self.n_heads = n_heads
+        self.n_kv_heads = n_kv_heads
+        self.head_dim = head_dim
+        self.vocab = vocab
+        self.interpret = interpret
+        self._embed_dim = n_heads * head_dim
+        rng = np.random.default_rng(seed)
+        scale = 1.0 / np.sqrt(self._embed_dim)
+        self._embed = rng.standard_normal(
+            (vocab, self._embed_dim)).astype(np.float32)
+        self._wq = (rng.standard_normal(
+            (self._embed_dim, n_heads * head_dim)) * scale).astype(np.float32)
+        self._wk = (rng.standard_normal(
+            (self._embed_dim, n_kv_heads * head_dim)) * scale).astype(
+                np.float32)
+        self._wv = (rng.standard_normal(
+            (self._embed_dim, n_kv_heads * head_dim)) * scale).astype(
+                np.float32)
+        self._wo = (rng.standard_normal(
+            (self._embed_dim, vocab)) * scale).astype(np.float32)
+        # the physical page pool the block tables index into
+        self.k_pages = np.zeros(
+            (n_kv_heads, num_blocks, block_size, head_dim), np.float32)
+        self.v_pages = np.zeros_like(self.k_pages)
+        # host swap tier: pages parked here by plan.swap_outs, copied back
+        # by plan.restores (ids from the scheduler's HostSwapSpace)
+        if num_swap_blocks > 0:
+            self.k_swap = np.zeros(
+                (n_kv_heads, num_swap_blocks, block_size, head_dim),
+                np.float32)
+            self.v_swap = np.zeros_like(self.k_swap)
+        else:
+            self.k_swap = self.v_swap = None
+        # rids parked in the host tier: their _seq_lens entry must survive
+        # arbitrary churn until the restore arrives (base.Backend contract)
+        self._swap_pinned: set = set()
+        # req_id -> tokens in cache (see base.PinnedLRU for the aging story)
+        self._seq_lens = PinnedLRU(pinned=self._swap_pinned)
+        self._last_wall = 0.0
+
+    # -- projections ---------------------------------------------------------
+
+    def _emb(self, tokens: np.ndarray) -> np.ndarray:
+        return self._embed[tokens % self.vocab]
+
+    def _kv(self, tokens: np.ndarray):
+        e = self._emb(tokens)                                  # [n, E]
+        k = (e @ self._wk).reshape(-1, self.n_kv_heads, self.head_dim)
+        v = (e @ self._wv).reshape(-1, self.n_kv_heads, self.head_dim)
+        return k, v
+
+    def _write(self, table: List[int], start: int, tokens: np.ndarray) -> None:
+        """Write K/V for ``tokens`` at positions start.. into the pages."""
+        k, v = self._kv(tokens)                  # [n, KV, D]
+        bs = self.block_size
+        for i in range(len(tokens)):
+            pos = start + i
+            page = table[pos // bs]
+            slot = pos % bs
+            self.k_pages[:, page, slot] = k[i]
+            self.v_pages[:, page, slot] = v[i]
+
+    def _track(self, rid: int, seq_len: int) -> None:
+        self._seq_lens.put(rid, seq_len)
+
+    # -- the batched attention step ------------------------------------------
+
+    def _attend(self, q: np.ndarray, tables: np.ndarray,
+                seq_lens: np.ndarray) -> np.ndarray:
+        """q: [rows, H, D] -> logits [rows, vocab] over the page pool.
+
+        The one subclass seam: same inputs, same float32 math, different
+        execution engine (pallas kernel vs NumPy)."""
+        raise NotImplementedError
+
+    # -- Backend protocol ----------------------------------------------------
+
+    def step_cost(self, plan: StepPlan) -> float:
+        """Real execution has no analytic model; report the last measured
+        step so virtual-time consumers still see a plausible number."""
+        return self._last_wall or 1e-3
+
+    def execute(self, plan: StepPlan,
+                block_tables: Optional[Dict[int, List[int]]] = None
+                ) -> StepResult:
+        t0 = time.perf_counter()
+        tables = block_tables if block_tables is not None \
+            else plan.block_tables
+        for rid in plan.preempted:
+            # pages were reclaimed; also unpins a swap whose restore was
+            # cancelled by a same-step recompute preemption
+            self._seq_lens.pop(rid, None)
+            self._swap_pinned.discard(rid)
+        # swap directives first, in contract order (base.Backend): a device
+        # block freed by a swap-out may be reallocated — even as a restore
+        # target — within this very plan.  Swapped requests keep their
+        # _seq_lens entry (pinned against LRU churn): their sequence
+        # survives, only its pages move.
+        for rid, pairs in plan.swap_outs.items():
+            self._swap_pinned.add(rid)
+            for dev_b, host_b in pairs:
+                self.k_swap[:, host_b] = self.k_pages[:, dev_b]
+                self.v_swap[:, host_b] = self.v_pages[:, dev_b]
+        for rid, pairs in plan.restores.items():
+            self._swap_pinned.discard(rid)
+            for host_b, dev_b in pairs:
+                self.k_pages[:, dev_b] = self.k_swap[:, host_b]
+                self.v_pages[:, dev_b] = self.v_swap[:, host_b]
+
+        rows: List[tuple] = []                # (rid, q_token, seq_len, table)
+        for rid, start, n in plan.prefill:
+            table = tables.get(rid, [])
+            toks = np.asarray(plan.new_tokens.get(rid, [0] * n), np.int64)
+            if len(toks) == 0:        # defensive: degenerate empty chunk
+                self._track(rid, start)
+                continue
+            self._write(table, start, toks)
+            self._track(rid, start + n)
+            # logits from the chunk's last position: becomes the first
+            # sampled token iff this chunk completes the prompt
+            rows.append((rid, int(toks[-1]), start + n, table))
+        for rid in plan.decode:
+            table = tables.get(rid, [])
+            tok = int(plan.new_tokens.get(rid, [0])[0])
+            pos = self._seq_lens.get(rid, 0)
+            self._write(table, pos, np.asarray([tok], np.int64))
+            self._track(rid, pos + 1)
+            rows.append((rid, tok, pos + 1, table))
+
+        tokens: Dict[int, int] = {}
+        if rows:
+            nb_max = max(len(t) for _, _, _, t in rows)
+            q = np.zeros((len(rows), self.n_heads, self.head_dim), np.float32)
+            bt = np.full((len(rows), max(nb_max, 1)), -1, np.int32)
+            sl = np.zeros((len(rows),), np.int32)
+            for i, (rid, tok, seq_len, table) in enumerate(rows):
+                e = self._emb(np.asarray([tok]))[0]
+                q[i] = (e @ self._wq).reshape(self.n_heads, self.head_dim)
+                bt[i, :len(table)] = table
+                sl[i] = seq_len
+            logits = self._attend(q, bt, sl)
+            for i, (rid, _, _, _) in enumerate(rows):
+                tokens[rid] = int(np.argmax(logits[i]))
+
+        self._last_wall = time.perf_counter() - t0
+        return StepResult(step_id=plan.step_id, tokens=tokens,
+                          wall_s=self._last_wall)
+
+    def release(self, req_id: int) -> None:
+        """Forget a finished request's bookkeeping (pages are owned by the
+        scheduler's block manager, nothing to free here)."""
+        self._seq_lens.pop(req_id, None)
+        self._swap_pinned.discard(req_id)

@@ -47,6 +47,34 @@ class DeviceModel:
         return {"t_swap_block": self.t_swap_block,
                 "t_recompute_token": self.t_prefill_tok}
 
+    def cpu_tier(self, *, decode_slowdown: float = 8.0,
+                 prefill_slowdown: float = 40.0,
+                 fixed_scale: float = 0.5,
+                 swap_speedup: float = 5.0) -> "DeviceModel":
+        """Heterogeneous calibration: THIS device's CPU-class sibling, for
+        emulating split-phase execution (repro.backend.hybrid) with an
+        ``EmulatedBackend`` pair.  The scaling story per term:
+
+          * decode is weight/KV-bandwidth-bound, so the CPU pays the
+            DDR-vs-HBM bandwidth ratio (``decode_slowdown``, ~an order of
+            magnitude) — the knob benchmarks/hybrid_split.py sweeps;
+          * prefill is compute-bound, where CPUs are catastrophically
+            behind (``prefill_slowdown``) — which is why the hybrid
+            routes prefill to the accelerator;
+          * the fixed floor shrinks (``fixed_scale``): no kernel-dispatch
+            or cross-device collective on the host path;
+          * "swapping" KV that already lives in host DRAM is a local
+            memcpy, not a PCIe trip (``swap_speedup``) — feed this into
+            ``SchedulerConfig.t_swap_block_decode`` so preemption prices
+            decode-tier victims at the right bandwidth.
+        """
+        return dataclasses.replace(
+            self,
+            t_fixed=self.t_fixed * fixed_scale,
+            t_prefill_tok=self.t_prefill_tok * prefill_slowdown,
+            t_decode_seq=self.t_decode_seq * decode_slowdown,
+            t_swap_block=self.t_swap_block / swap_speedup)
+
     @classmethod
     def from_roofline(cls, bound_s_prefill: float, prefill_tokens: int,
                       bound_s_decode: float, decode_batch: int,

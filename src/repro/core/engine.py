@@ -41,6 +41,12 @@ class EngineConfig:
     scheduler: SchedulerConfig = SchedulerConfig()
     device: DeviceModel = DeviceModel()
     backend: str = "emulated"               # worker executor (repro.backend)
+    # split-phase children when backend == "hybrid" (docs/backends.md):
+    # prefill tier / decode tier leaf backends, and the CPU-tier decode
+    # slowdown applied when the decode child is emulated
+    prefill_backend: str = "emulated"
+    decode_backend: str = "emulated"
+    decode_slowdown: float = 8.0
     ring_slots: int = 8
     # 0 = auto-size from the scheduler config: plans carry block tables +
     # input ids, so a slot must hold max_tokens_per_step input ids plus the
@@ -194,7 +200,10 @@ def _worker(cfg: EngineConfig, idx: int, ring_name: str, board_name: str,
     reader = ring.reader(idx)
     board = CompletionBoard.attach(board_name, cfg.tp_degree)
     backend = make_backend(cfg.backend, device=cfg.device,
-                           scheduler_cfg=cfg.scheduler)
+                           scheduler_cfg=cfg.scheduler,
+                           prefill_backend=cfg.prefill_backend,
+                           decode_backend=cfg.decode_backend,
+                           decode_slowdown=cfg.decode_slowdown)
     while True:
         payload, _ = reader.dequeue(timeout=600.0,
                                     yield_every=cfg.yield_every)

@@ -34,12 +34,30 @@ def main() -> None:
     ap.add_argument("--async-sched", action="store_true")
     ap.add_argument("--yield-every", type=int, default=64)
     ap.add_argument("--backend", default="emulated",
-                    choices=("emulated", "jax"),
-                    help="worker executor; jax runs the paged pallas "
-                         "decode (keep --kv-capacity small)")
+                    choices=("emulated", "jax", "cpu", "hybrid"),
+                    help="worker executor (docs/backends.md); jax runs the "
+                         "paged pallas decode, cpu the NumPy decode path "
+                         "(keep --kv-capacity small for both), hybrid "
+                         "splits prefill/decode across two child backends")
+    ap.add_argument("--prefill-backend", default="emulated",
+                    choices=("emulated", "jax", "cpu"),
+                    help="hybrid only: accelerator-tier child executing "
+                         "the prefill sub-plan")
+    ap.add_argument("--decode-backend", default="emulated",
+                    choices=("emulated", "jax", "cpu"),
+                    help="hybrid only: CPU-tier child executing the decode "
+                         "sub-plan (emulated children get the device's "
+                         "cpu_tier cost model)")
+    ap.add_argument("--decode-slowdown", type=float, default=8.0,
+                    help="hybrid only: CPU-tier decode slowdown applied to "
+                         "an emulated decode child (DeviceModel.cpu_tier)")
+    ap.add_argument("--max-decode-seqs", type=int, default=0,
+                    help="decode-tier capacity: max decode slots per step "
+                         "(0 = uncapped; round-robin under the cap)")
     ap.add_argument("--kv-capacity", type=int, default=0,
                     help="KV capacity in token slots (default: 4M emulated; "
-                         "64K for --backend jax, whose page pool is dense)")
+                         "64K when any physical backend (jax/cpu) is in "
+                         "play, since their page pools are dense)")
     ap.add_argument("--block-size", type=int, default=64)
     ap.add_argument("--preemption-policy", default="recompute",
                     choices=("recompute", "swap", "adaptive"),
@@ -58,9 +76,20 @@ def main() -> None:
                          "repro.launch.dryrun --emit-devmodel")
     args = ap.parse_args()
 
+    if (args.backend == "hybrid"
+            and ((args.prefill_backend in ("jax", "cpu"))
+                 != (args.decode_backend in ("jax", "cpu")))):
+        # fail fast here: make_backend would raise the same error, but
+        # post-fork inside every worker, leaving the engine to hang on
+        # the completion board until its timeout
+        ap.error("hybrid children must be both physical (jax/cpu) or "
+                 "both emulated")
     got = cpu_budget(args.cores)
+    physical = {args.backend} | ({args.prefill_backend, args.decode_backend}
+                                 if args.backend == "hybrid" else set())
     if not args.kv_capacity:
-        args.kv_capacity = (1 << 16) if args.backend == "jax" else (1 << 22)
+        args.kv_capacity = ((1 << 16) if physical & {"jax", "cpu"}
+                            else (1 << 22))
     if args.devmodel:
         from pathlib import Path
         device = DeviceModel(
@@ -75,13 +104,25 @@ def main() -> None:
             block_size=args.block_size,
             preemption_policy=args.preemption_policy,
             swap_capacity_tokens=args.swap_capacity or args.kv_capacity,
+            max_decode_seqs=args.max_decode_seqs,
+            t_swap_block_decode=(
+                device.cpu_tier(
+                    decode_slowdown=args.decode_slowdown).t_swap_block
+                if args.backend == "hybrid" else -1.0),
             **device.preemption_calibration()),
         device=device, backend=args.backend,
+        prefill_backend=args.prefill_backend,
+        decode_backend=args.decode_backend,
+        decode_slowdown=args.decode_slowdown,
         ring_slot_bytes=args.ring_slot_bytes,
         yield_every=args.yield_every, async_sched=args.async_sched,
     )
+    backend_desc = args.backend
+    if args.backend == "hybrid":
+        backend_desc += (f"[{args.prefill_backend}->prefill, "
+                         f"{args.decode_backend}->decode]")
     print(f"[serve] tp={args.tp} cores={got} pool={args.pool_width} "
-          f"backend={args.backend} async_sched={args.async_sched} "
+          f"backend={backend_desc} async_sched={args.async_sched} "
           f"preemption={args.preemption_policy}")
     text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
 

@@ -68,6 +68,19 @@ class SchedulerConfig:
     # this stack) and a swapped request pins host blocks while it waits,
     # so a marginal modeled win is a measured loss.
     swap_margin: float = 2.0
+    # -- split-phase (hybrid) tier awareness, docs/backends.md ----------
+    # Swap bandwidth for victims whose KV lives on the DECODE tier: under
+    # a hybrid backend a decoding request's pages sit in CPU memory, so
+    # "swapping" them is a host-local copy, far cheaper than the PCIe
+    # trip an accelerator-tier victim pays.  < 0 means "same as
+    # t_swap_block" (unified execution — every victim is device-tier).
+    t_swap_block_decode: float = -1.0
+    # Decode-tier capacity: at most this many decode slots per step (the
+    # CPU tier serves fewer concurrent sequences than the accelerator).
+    # Admission stays bounded by max_num_seqs; this bounds how many of
+    # the admitted may *decode* in one step, round-robin so none starve.
+    # 0 = uncapped (unified execution).
+    max_decode_seqs: int = 0
 
     def __post_init__(self):
         if self.preemption_policy not in PREEMPTION_POLICIES:
@@ -106,6 +119,19 @@ class StepPlan:
         default_factory=dict)              # req_id -> [(device_blk, host_blk)]
     restores: Dict[int, List[Tuple[int, int]]] = dataclasses.field(
         default_factory=dict)              # req_id -> [(host_blk, device_blk)]
+    # phase tagging: req_ids whose prompt finishes prefilling this step.
+    # Advisory for most backends; split-phase backends (repro.backend.
+    # hybrid) key their prefill->decode KV handoff on it.
+    prefill_done: List[int] = dataclasses.field(default_factory=list)
+    # phase tagging for swap traffic: req_ids whose ``swap_outs`` (evicted
+    # while DECODING) or ``restores`` (resuming decode) move KV that lives
+    # on the decode tier under a split-phase backend.  Lets cost-only
+    # consumers route/bill the copies against the tier the scheduler
+    # priced them at — a swap victim is dropped from decode/prefill, and
+    # a restored decoder may be rotated out of ``decode`` by the
+    # max_decode_seqs cap, so the phase is otherwise unrecoverable from
+    # the plan.
+    decode_tier_swaps: List[int] = dataclasses.field(default_factory=list)
     _raw: Optional[bytes] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -130,6 +156,8 @@ class StepPlan:
                 "new_tokens": self.new_tokens,
                 "swap_outs": self.swap_outs,
                 "restores": self.restores,
+                "prefill_done": self.prefill_done,
+                "decode_tier_swaps": self.decode_tier_swaps,
             }).encode()
         return self._raw
 
@@ -143,7 +171,9 @@ class StepPlan:
                    {int(k): [tuple(p) for p in v]
                     for k, v in d.get("swap_outs", {}).items()},
                    {int(k): [tuple(p) for p in v]
-                    for k, v in d.get("restores", {}).items()})
+                    for k, v in d.get("restores", {}).items()},
+                   d.get("prefill_done", []),
+                   d.get("decode_tier_swaps", []))
 
     @property
     def payload_bytes(self) -> int:
@@ -161,7 +191,9 @@ class StepPlan:
                 + 8 * len(self.preempted) + 7 * n_bt + 9 * n_nt
                 + 12 * (len(self.block_tables) + len(self.new_tokens))
                 + 14 * self.n_swapped_blocks
-                + 12 * (len(self.swap_outs) + len(self.restores)))
+                + 12 * (len(self.swap_outs) + len(self.restores))
+                + 8 * len(self.prefill_done)
+                + 8 * len(self.decode_tier_swaps))
 
 
 class Scheduler:
@@ -173,6 +205,9 @@ class Scheduler:
         # aborted-while-swapped rids awaiting a state-drop notice to the
         # workers (shipped via the next broadcast plan's ``preempted``)
         self._dropped_while_swapped: List[int] = []
+        # round-robin cursor over decoders when max_decode_seqs caps the
+        # decode tier (fairness: the cap must not starve the tail)
+        self._decode_cursor = 0
         self.step_id = 0
         swap = None
         if cfg.num_swap_blocks > 0:
@@ -243,6 +278,10 @@ class Scheduler:
             plan.decode.remove(victim.req_id)
             refund += 1
             victim.kv_slots -= 1
+        if victim.req_id in plan.prefill_done:
+            # its final chunk is rolled back below: the prompt does NOT
+            # finish this step, so phase-split backends must not hand off
+            plan.prefill_done.remove(victim.req_id)
         kept = []
         for entry in plan.prefill:
             if entry[0] == victim.req_id:
@@ -278,9 +317,17 @@ class Scheduler:
         # sustained pressure can reclaim them first, docs/preemption.md).
         # Recompute also drops generated-token KV for free, the same
         # emulation optimism _preempt_recompute documents.
+        # Tier-aware pricing (docs/backends.md): the transfer is billed
+        # against the tier that holds the victim's KV — a DECODING
+        # victim's pages live on the decode (CPU) tier under a hybrid
+        # backend, where the round trip is a host-local copy.
+        t_swap = self.cfg.t_swap_block
+        if (victim.state == RequestState.DECODING
+                and self.cfg.t_swap_block_decode >= 0):
+            t_swap = self.cfg.t_swap_block_decode
         resumable = (len(victim.block_hashes) * self.cfg.block_size
                      if self.cfg.enable_prefix_cache else 0)
-        swap_cost = 2 * len(victim.block_table) * self.cfg.t_swap_block
+        swap_cost = 2 * len(victim.block_table) * t_swap
         recompute_cost = (max(victim.prefilled - resumable, 0)
                           * self.cfg.t_recompute_token)
         return ("swap" if swap_cost * self.cfg.swap_margin < recompute_cost
@@ -309,6 +356,8 @@ class Scheduler:
             # (host blocks were already released at swap-in, so the
             # computed state is genuinely gone — full recompute)
             del plan.restores[victim.req_id]
+            if victim.req_id in plan.decode_tier_swaps:
+                plan.decode_tier_swaps.remove(victim.req_id)
         self._release_blocks(victim)
         victim.prefilled = 0
         victim.block_hashes = []       # recomputed blocks re-register
@@ -327,6 +376,11 @@ class Scheduler:
         pairs = self.blocks.swap_out(victim.req_id, victim.block_table)
         assert pairs is not None       # _choose_preemption checked capacity
         plan.swap_outs[victim.req_id] = pairs
+        if victim.state == RequestState.DECODING:
+            # phase tag: split-phase backends route/bill this swap-out
+            # against the decode tier, matching _choose_preemption's
+            # t_swap_block_decode pricing
+            plan.decode_tier_swaps.append(victim.req_id)
         victim.host_block_table = [h for _, h in pairs]
         victim.block_table = []
         victim.kv_allocated = 0        # kv_slots kept: sized for swap_in
@@ -410,6 +464,10 @@ class Scheduler:
             req.kv_allocated = len(pairs) * cfg.block_size
             req.state = (RequestState.PREFILLING if req.prefill_remaining > 0
                          else RequestState.DECODING)
+            if req.state == RequestState.DECODING:
+                # phase tag: this restore refills decode-tier pages, even
+                # if the decode cap rotates the request out of this plan
+                plan.decode_tier_swaps.append(req.req_id)
             # to the FRONT of running: preemption victims are picked from
             # the tail (most recently admitted), and a restored request is
             # among the oldest admissions — parking it at the tail would
@@ -418,8 +476,21 @@ class Scheduler:
 
         # 1. decodes first (latency priority, one token each).  Iterating a
         # snapshot: _preempt may drop later entries, whose state flips to
-        # WAITING, so the state check below skips them.
-        for req in list(self.running):
+        # WAITING, so the state check below skips them.  When the decode
+        # tier is capacity-bound (max_decode_seqs — split-phase serving,
+        # docs/backends.md), only that many decode slots are scheduled per
+        # step, rotating through the decoders so none starve.
+        decoders = list(self.running)
+        cap = cfg.max_decode_seqs
+        if cap > 0:
+            eligible = [r for r in decoders
+                        if r.state == RequestState.DECODING]
+            if len(eligible) > cap:
+                start = self._decode_cursor % len(eligible)
+                decoders = eligible[start:] + eligible[:start]
+                decoders = decoders[:cap]
+                self._decode_cursor += cap
+        for req in decoders:
             if req.state != RequestState.DECODING or budget <= 0:
                 continue
             ok, refund = self._allocate_with_preemption(req, 1, plan)
@@ -444,6 +515,7 @@ class Scheduler:
                 budget -= n
             if req.prefill_remaining == 0:
                 req.state = RequestState.DECODING
+                plan.prefill_done.append(req.req_id)
 
         # 3. admit waiting requests while budget + slots + blocks remain.
         # Admission is optimistic (vLLM-style): it reserves blocks for the
@@ -479,6 +551,7 @@ class Scheduler:
             if req.prefill_remaining == 0:
                 # n == 0 only for empty prompts: straight to decode
                 req.state = RequestState.DECODING
+                plan.prefill_done.append(req.req_id)
 
         if (not plan.prefill and not plan.decode
                 and not plan.swap_outs and not plan.restores):

@@ -54,6 +54,14 @@ class ServingParams:
     # Fused multi-step decode (models.decode_multi): a decode-only plan
     # executes k tokens per broadcast/dispatch/barrier round trip.
     decode_fusion: int = 1
+    # Split-phase execution (repro.backend.hybrid, docs/backends.md):
+    # when set, decode runs on an EmulatedBackend with THIS device model
+    # (CPU tier — typically ``device.cpu_tier(...)``) while prefill keeps
+    # ``device``; a step then costs max(prefill, decode) + the
+    # prefill->decode page handoff at ``t_handoff_block`` per block
+    # (defaults to the prefill device's swap bandwidth when <= 0).
+    decode_device: Optional[DeviceModel] = None
+    t_handoff_block: float = 0.0
 
 
 @dataclasses.dataclass
@@ -81,7 +89,16 @@ class ServingModel:
         self.sim = Sim(params.n_cores, quantum=params.quantum)
         self.sched = Scheduler(params.scheduler)
         # virtual-time device: the backend's cost model, never its sleep
-        self.backend = EmulatedBackend(params.device, sleep=False)
+        if params.decode_device is not None:
+            from repro.backend.hybrid import HybridBackend
+            self.backend = HybridBackend(
+                EmulatedBackend(params.device, sleep=False),
+                EmulatedBackend(params.decode_device, sleep=False),
+                t_handoff_block=(params.t_handoff_block
+                                 if params.t_handoff_block > 0
+                                 else params.device.t_swap_block))
+        else:
+            self.backend = EmulatedBackend(params.device, sleep=False)
         self.requests: List[Request] = []
         self.tok_queue: List[Request] = []
         self.tok_ev = self.sim.event("tok-queue")
@@ -318,6 +335,25 @@ def llama8b_tp4_params(n_cores: int, tp: int = 4,
                                   swap_capacity_tokens=kv_capacity_tokens,
                                   **device.preemption_calibration()),
     )
+
+
+def with_hybrid_decode(params: ServingParams, *,
+                       decode_slowdown: float = 8.0,
+                       max_decode_seqs: int = 0) -> ServingParams:
+    """Split-phase variant of ``params``: decode moves to the device's
+    CPU-tier sibling (``DeviceModel.cpu_tier``), the scheduler prices
+    decode-tier preemption victims at the CPU tier's swap bandwidth
+    (``t_swap_block_decode``), and — optionally — caps the decode tier's
+    concurrent slots.  The unified baseline is ``params`` itself, so
+    benchmarks/hybrid_split.py sweeps are one ``dataclasses.replace``
+    apart."""
+    decode_device = params.device.cpu_tier(decode_slowdown=decode_slowdown)
+    sched = dataclasses.replace(
+        params.scheduler,
+        t_swap_block_decode=decode_device.t_swap_block,
+        max_decode_seqs=max_decode_seqs)
+    return dataclasses.replace(params, decode_device=decode_device,
+                               scheduler=sched)
 
 
 def attacker_victim_workload(params: ServingParams, *, attacker_rps: float,

@@ -1,10 +1,11 @@
-"""Backend conformance: emulated and jax execute the same plans the same.
+"""JaxBackend specifics: determinism, registry, prefix-page sharing.
 
-The acceptance contract: driving an identical request workload through
-``Scheduler`` + backend must yield the same request completion order and
-token counts for ``EmulatedBackend`` and ``JaxBackend`` — execution is a
-pluggable detail, scheduling semantics are not.  Also covers the paged
-decode kernel against its gather reference.
+The cross-backend conformance contract (same workload -> same completion
+order/counts/tokens for every registered backend) lives in
+tests/test_backend_conformance.py; this file keeps the jax-backend
+deep-dives — deterministic sampling, swap round-trip page contents,
+prefix-page sharing — plus the paged decode kernel against its gather
+reference and the make_backend registry.
 """
 from __future__ import annotations
 

@@ -1,13 +1,24 @@
 #!/usr/bin/env python3
-"""Fail on broken intra-repo links in README.md and docs/*.md.
+"""Fail on broken intra-repo links and stale code references in the docs.
 
-Checks every markdown inline link ``[text](target)`` whose target is not
-external (http/https/mailto) or a pure in-page anchor.  Relative targets
-must resolve to an existing file or directory from the linking file's
-directory; a ``#fragment`` suffix is allowed (the file part is checked,
-anchors are not).  Also checks backtick-quoted repo paths in the docs
-tables (``src/...``, ``benchmarks/...``, ``artifacts/`` excepted — those
-are build outputs).
+Three checks over README.md and docs/*.md:
+
+1. **Markdown links** — every inline link ``[text](target)`` whose target
+   is not external (http/https/mailto) or a pure in-page anchor must
+   resolve to an existing file or directory from the linking file's
+   directory; a ``#fragment`` suffix is allowed (the file part is
+   checked, anchors are not).
+2. **Backtick repo paths** — backtick-quoted paths in the docs tables
+   (``src/...``, ``benchmarks/...``; ``artifacts/`` excepted — those are
+   build outputs) must exist on disk.
+3. **Backtick module names** — dotted references like
+   ``repro.backend.hybrid.HybridBackend`` or ``benchmarks.hybrid_split``
+   must resolve against the source tree (``repro.*`` under ``src/``,
+   ``benchmarks.*`` at the repo root).  Trailing CamelCase / call-syntax
+   components are treated as attributes, and ONE trailing lowercase
+   component is allowed as a function/constant attribute — but if two or
+   more trailing components fail to resolve, the module itself is gone
+   and the reference is stale.  So docs can't silently rot as files move.
 
 Stdlib only; run from anywhere: ``python tools/check_docs_links.py``.
 """
@@ -22,15 +33,66 @@ REPO = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 CODE_PATH_RE = re.compile(
     r"`((?:src|benchmarks|docs|tools|examples|tests)/[A-Za-z0-9_./-]+)`")
+MODULE_RE = re.compile(r"`((?:repro|benchmarks)(?:\.[A-Za-z_][A-Za-z0-9_]*)+)"
+                       r"(?:\([^)`]*\))?`")
 EXTERNAL = ("http://", "https://", "mailto:")
 # build outputs referenced as "expected artifact" — not required to exist
 GENERATED_PREFIXES = ("artifacts/",)
+# where each dotted root lives on disk
+MODULE_ROOTS = {"repro": REPO / "src" / "repro", "benchmarks": REPO / "benchmarks"}
 
 
 def md_files() -> list[Path]:
     files = [REPO / "README.md"]
     files += sorted((REPO / "docs").glob("*.md"))
     return [f for f in files if f.exists()]
+
+
+def unresolved_module_tail(dotted: str) -> tuple[list[str], Path]:
+    """(components of ``dotted`` that do not map to a package dir or
+    module file, deepest resolved path) — scanning left to right from
+    the root; resolution stops at the first miss, everything after it
+    can only be an attribute."""
+    parts = dotted.split(".")
+    path = MODULE_ROOTS[parts[0]]
+    if not path.exists():
+        return parts, REPO
+    for i, part in enumerate(parts[1:], start=1):
+        as_dir = path / part
+        as_mod = path / f"{part}.py"
+        if as_dir.is_dir():
+            path = as_dir
+        elif as_mod.is_file():
+            path = as_mod
+        else:
+            return parts[i:], path
+    return [], path
+
+
+def check_module_ref(dotted: str) -> bool:
+    """True iff ``dotted`` resolves: every component maps to a package or
+    module, except a trailing attribute — a CamelCase chain (class +
+    members) or ONE lowercase component (function, constant) — whose
+    first name must actually appear in the resolved module (its
+    ``__init__.py`` for packages).  Anything deeper that fails to
+    resolve is a stale module path."""
+    tail, path = unresolved_module_tail(dotted)
+    if not tail:
+        return True
+    lower_tail = [p for p in tail if p[:1].islower()]
+    if tail[0][:1].isupper():
+        lower_tail = []          # class attribute chain: members forgiven
+    if len(lower_tail) > 1:
+        return False
+    # the attribute must be DEFINED in the module it hangs off — a def,
+    # class, or module-level assignment, not a mere mention (a name
+    # surviving only in a comment or docstring must not mask a stale ref)
+    src = path / "__init__.py" if path.is_dir() else path
+    if not src.is_file():
+        return False
+    name = re.escape(tail[0])
+    pattern = rf"^\s*(?:def\s+{name}\b|class\s+{name}\b|{name}\s*[:=])"
+    return re.search(pattern, src.read_text(), re.M) is not None
 
 
 def check_file(md: Path) -> list[str]:
@@ -54,6 +116,11 @@ def check_file(md: Path) -> list[str]:
         if not resolved.exists():
             errors.append(f"{md.relative_to(REPO)}: broken {kind} "
                           f"-> {target}")
+    for m in MODULE_RE.finditer(text):
+        dotted = m.group(1)
+        if not check_module_ref(dotted):
+            errors.append(f"{md.relative_to(REPO)}: stale module ref "
+                          f"-> {dotted}")
     return errors
 
 
@@ -65,10 +132,11 @@ def main() -> int:
         print(f"ERROR {e}")
     n_files = len(md_files())
     if errors:
-        print(f"{len(errors)} broken intra-repo link(s) across "
+        print(f"{len(errors)} broken reference(s) across "
               f"{n_files} file(s)")
         return 1
-    print(f"ok: intra-repo links resolve in {n_files} markdown file(s)")
+    print(f"ok: links, code paths, and module refs resolve in "
+          f"{n_files} markdown file(s)")
     return 0
 
 
