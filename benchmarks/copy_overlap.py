@@ -1,0 +1,306 @@
+"""Copy-overlap sweep: CPU-gated transfer hiding and the swap crossover.
+
+The async copy engine (repro.core.copyengine, docs/copy_engine.md) lets
+swap/restore and hybrid-handoff transfers drain on DMA-style streams
+concurrently with compute — but every descriptor is submitted by a CPU
+thread, so the overlap is CPU-gated: with ample cores a step costs
+``submit + max(compute, copies)`` instead of ``compute + copies``, and as
+submission gets starved (fewer/slower cores) the overlapped cost climbs
+back to — and past — the serialized one.  This sweep measures both
+halves:
+
+  1. **Step-cost microbench** (deterministic): one representative
+     KV-cliff step (a 2K-token prefill chunk + 32 resident decodes +
+     24 swapped blocks) priced by the ``DeviceModel`` across
+     ``copy_streams`` x submission-cost cells.  Shows the hidden
+     fraction of the copy time with ample CPU and the degradation to
+     (past) the serialized cost when submission is starved.
+
+  2. **Preemption-policy crossover re-measure** (DES): the
+     benchmarks/preemption_policy.py attacker/victim workload at the KV
+     cliff, recompute vs swap across interconnects, now with transfers
+     hidden.  This is the ROADMAP's stated reason to build the engine:
+     serialized swap loses on PCIe-class parts because every restore
+     stretches the device step — with the copies overlapped, swap's
+     PCIe penalty vs recompute collapses to near parity and its
+     coupled-part burst win deepens (each round trip still pays one
+     scheduling epoch of latency — swap-out frees land a step late,
+     restores compute a step late — which is what parity-not-win on
+     PCIe measures).  The ``starved`` submission cells show the
+     boundary moving back: an engine whose CPUs cannot feed the copy
+     streams behaves like the pre-engine serialized stack (the paper's
+     core phenomenon, applied to its own mitigation).
+
+  3. **Hybrid handoff overlap** (DES): the benchmarks/hybrid_split.py
+     heavy-load split-phase workload with the prefill->decode page
+     handoff riding the copy engine.  Handoff copies are NOT on the
+     block-recycling path (no IN_FLIGHT allocation coupling), so hiding
+     them is a pure win with ample CPU — and a pure loss when
+     submission is starved, because the descriptors still must be
+     written before either tier can retire the step.
+
+Measured shape (artifacts/copy_overlap.json): with ample CPU the
+microbench hides >99% of the copy time and the hybrid handoff run
+gains ~9% fleet mean TTFT.  At the cliff, one stream collapses swap's
+PCIe penalty vs recompute (+4.0s -> +0.3s burst, +9.4s -> +1.0s
+sustained), deepens the coupled burst win (-0.15s -> -0.8s), and flips
+sustained+coupled from a serialized swap LOSS (+2.0s, restore cycling)
+to a -3.0s win; two streams flip every measured regime to swap, PCIe
+included.  Starved submission returns everything to (or past) the
+serialized cost and recompute wins again everywhere.  The ROADMAP
+records sub-step completion (stream events / double-buffered swap-out)
+as the follow-on for the one-epoch restore latency that remains.
+
+Artifact: artifacts/copy_overlap.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.core.devmodel import DeviceModel
+from repro.serving.scheduler import StepPlan
+from repro.sim.serving import (attacker_victim_workload, llama8b_tp4_params,
+                               victim_stats, with_async_copies,
+                               with_hybrid_decode)
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+# the crossover re-measure is only apples-to-apples if it runs the SAME
+# cliff regime preemption_policy measured serialized — import it, never
+# copy it (the sys.path nudge covers `python benchmarks/copy_overlap.py`;
+# `python -m benchmarks.copy_overlap` resolves the package directly)
+try:
+    from benchmarks.preemption_policy import (
+        ATTACKER_NEW_TOKENS, ATTACKER_TOKENS, INTERCONNECTS, KV_CAPACITY,
+        PRESSURES, VICTIM_TOKENS)
+except ImportError:
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.preemption_policy import (
+        ATTACKER_NEW_TOKENS, ATTACKER_TOKENS, INTERCONNECTS, KV_CAPACITY,
+        PRESSURES, VICTIM_TOKENS)
+
+STREAMS = (0, 1, 2)
+# CPU submission regimes: 'ample' is a healthy descriptor write; 'starved'
+# models contended/budgeted cores where each submission costs as much as
+# a PCIe block copy — the regime where overlap degrades to serialized
+SUBMIT = {"ample": 1e-6, "starved": 3e-4}
+
+
+# -- 1. deterministic step-cost microbench ---------------------------------
+
+
+def _cliff_step() -> StepPlan:
+    """One representative step at the KV cliff: a prefill chunk, a dense
+    decode batch, and two victims' worth of swap traffic."""
+    swap_outs = {100: [(i, i) for i in range(12)]}
+    restores = {101: [(i, 40 + i) for i in range(12)]}
+    return StepPlan(1, [(1, 0, 2048)], list(range(2, 34)), [],
+                    block_tables={rid: list(range(8)) for rid in range(2, 34)},
+                    swap_outs=swap_outs, restores=restores)
+
+
+def step_cost_cells() -> list:
+    plan = _cliff_step()
+    rows = []
+    base = DeviceModel(t_fixed=2e-3, t_prefill_tok=1e-5, t_decode_seq=2e-5,
+                       t_swap_block=INTERCONNECTS["pcie"], max_step=2.0)
+    compute_only = dataclasses.replace(base, t_swap_block=0.0)
+    compute = compute_only.step_time(
+        dataclasses.replace(plan, swap_outs={}, restores={}, _raw=None))
+    copy_total = plan.n_swapped_blocks * base.t_swap_block
+    serialized = base.step_time(plan)
+    for streams in STREAMS:
+        for regime, t_submit in SUBMIT.items():
+            if streams == 0 and regime != "ample":
+                continue               # serialized path submits nothing
+            dev = dataclasses.replace(base, copy_streams=streams,
+                                      t_submit_per_copy=t_submit)
+            t = dev.step_time(plan)
+            rows.append({
+                "copy_streams": streams,
+                "submission": regime if streams else "-",
+                "step_ms": round(t * 1e3, 3),
+                "compute_ms": round(compute * 1e3, 3),
+                "copy_ms": round(copy_total * 1e3, 3),
+                # how much of the copy time vanished behind compute
+                "hidden_frac": round((serialized - t) / copy_total, 3),
+            })
+    return rows
+
+
+# -- 3. hybrid handoff overlap ---------------------------------------------
+
+
+def handoff_cell(streams: int, regime: str, *, cores: int = 9,
+                 duration: float = 8.0) -> dict:
+    """Heavy-load split-phase serving (benchmarks/hybrid_split.py shape):
+    prefill saturates the accelerator tier while every finished prompt
+    hands its pages to the CPU decode tier — the copy traffic the
+    ROADMAP's overlapped-handoff follow-on wanted hidden."""
+    p = llama8b_tp4_params(cores)
+    device = dataclasses.replace(p.device, t_swap_block=2e-5)
+    sched = dataclasses.replace(p.scheduler, max_num_seqs=256,
+                                **device.preemption_calibration())
+    p = dataclasses.replace(p, device=device, scheduler=sched)
+    p = with_hybrid_decode(p, decode_slowdown=8.0)
+    if streams > 0:
+        p = with_async_copies(p, copy_streams=streams,
+                              t_submit_per_copy=SUBMIT[regime])
+    res = attacker_victim_workload(
+        p, attacker_rps=20.0, attacker_tokens=4_000,
+        n_victims=4, victim_tokens=VICTIM_TOKENS,
+        attacker_new_tokens=256, duration=duration,
+        horizon=duration + 240.0)
+    ttfts = [r.ttft for r in res.requests if r.ttft is not None]
+    done = [r for r in res.requests if r.t_done]
+    return {
+        "copy_streams": streams, "submission": regime if streams else "-",
+        "all_mean_ttft": (round(sum(ttfts) / len(ttfts), 4)
+                          if ttfts else None),
+        "makespan": (round(max(r.t_done for r in done), 2)
+                     if done else None),
+        "completed": len(done),
+        "steps": res.sched_costs,
+    }
+
+
+def handoff_cells(fast: bool = False) -> list:
+    variants = ([(0, "-"), (1, "ample"), (1, "starved")] if fast else
+                [(0, "-"), (1, "ample"), (2, "ample"), (1, "starved")])
+    return [handoff_cell(s, r) for s, r in variants]
+
+
+# -- 2. DES crossover re-measure -------------------------------------------
+
+
+def one_cell(policy: str, interconnect: str, streams: int, regime: str, *,
+             cores: int = 9, tp: int = 4, rps: float = 10.0,
+             duration: float = 30.0) -> dict:
+    p = llama8b_tp4_params(cores, tp=tp, preemption_policy=policy,
+                           kv_capacity_tokens=KV_CAPACITY)
+    device = dataclasses.replace(p.device,
+                                 t_swap_block=INTERCONNECTS[interconnect])
+    # cache off: the regime where recompute pays full re-prefill and the
+    # serialized swap-vs-recompute boundary actually moved with the
+    # interconnect (benchmarks/preemption_policy.py, no-cache cells) —
+    # the boundary overlap is supposed to shift
+    sched = dataclasses.replace(p.scheduler, enable_prefix_cache=False,
+                                **device.preemption_calibration())
+    p = dataclasses.replace(p, device=device, scheduler=sched)
+    if streams > 0:
+        p = with_async_copies(p, copy_streams=streams,
+                              t_submit_per_copy=SUBMIT[regime])
+    res = attacker_victim_workload(
+        p, attacker_rps=rps, attacker_tokens=ATTACKER_TOKENS,
+        n_victims=5, victim_tokens=VICTIM_TOKENS,
+        attacker_new_tokens=ATTACKER_NEW_TOKENS,
+        duration=duration, horizon=duration + 260.0)
+    ttfts = [r.ttft for r in res.requests if r.ttft is not None]
+    done = [r for r in res.requests if r.t_done]
+    return {
+        "policy": policy, "interconnect": interconnect,
+        "copy_streams": streams, "submission": regime if streams else "-",
+        **victim_stats(res, p.timeout),
+        "all_mean_ttft": (round(sum(ttfts) / len(ttfts), 2)
+                          if ttfts else None),
+        "completed": len(done),
+        "makespan": (round(max(r.t_done for r in done), 1)
+                     if done else None),
+        "steps": res.sched_costs,
+        "total_preemptions": sum(r.n_preemptions for r in res.requests),
+        "total_swaps": sum(r.n_swaps for r in res.requests),
+    }
+
+
+def run(write: bool = True, fast: bool = False) -> dict:
+    micro = step_cost_cells()
+    pressures = ("burst",) if fast else tuple(PRESSURES)
+    swap_variants = ([(0, "-"), (1, "ample")] if fast else
+                     [(0, "-"), (1, "ample"), (1, "starved"), (2, "ample")])
+    cells, crossover = [], []
+    for pressure in pressures:
+        duration = PRESSURES[pressure]
+        for interconnect in INTERCONNECTS:
+            base = one_cell("recompute", interconnect, 0, "-",
+                            duration=duration)
+            base["pressure"] = pressure
+            cells.append(base)
+            for streams, regime in swap_variants:
+                c = one_cell("swap", interconnect, streams, regime,
+                             duration=duration)
+                c["pressure"] = pressure
+                c["mean_ttft_delta_vs_recompute"] = (
+                    None if (c["mean_completed_ttft"] is None
+                             or base["mean_completed_ttft"] is None)
+                    else round(c["mean_completed_ttft"]
+                               - base["mean_completed_ttft"], 2))
+                c["timeouts_delta_vs_recompute"] = (c["timeouts"]
+                                                    - base["timeouts"])
+                cells.append(c)
+            by_streams = {(c["copy_streams"], c["submission"]): c
+                          for c in cells
+                          if c["pressure"] == pressure
+                          and c["interconnect"] == interconnect
+                          and c["policy"] == "swap"}
+
+            def _wins(c):
+                d = c["mean_ttft_delta_vs_recompute"]
+                return (c["timeouts_delta_vs_recompute"] < 0
+                        or (c["timeouts_delta_vs_recompute"] <= 0
+                            and d is not None and d < 0))
+
+            crossover.append({
+                "pressure": pressure, "interconnect": interconnect,
+                "swap_wins_serialized": _wins(by_streams[(0, "-")]),
+                "swap_wins_overlapped": _wins(by_streams[(1, "ample")]),
+                "swap_wins_starved": (
+                    _wins(by_streams[(1, "starved")])
+                    if (1, "starved") in by_streams else None),
+            })
+    out = {"step_cost": micro, "cells": cells, "crossover": crossover,
+           "handoff": handoff_cells(fast=fast)}
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "copy_overlap.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def main(fast: bool = False) -> None:
+    out = run(fast=fast)
+    print("-- step cost at the cliff (24 swapped blocks, PCIe-priced) --")
+    print("streams,submission,step_ms,compute_ms,copy_ms,hidden_frac")
+    for r in out["step_cost"]:
+        print(f"{r['copy_streams']},{r['submission']},{r['step_ms']},"
+              f"{r['compute_ms']},{r['copy_ms']},{r['hidden_frac']}")
+    print("-- DES: policy x interconnect x streams at the KV cliff --")
+    print("pressure,interconnect,policy,streams,submission,first_ttft,"
+          "mean_ttft,all_ttft,makespan,steps,timeouts,preempts,swaps,"
+          "d_ttft,d_timeouts")
+    for c in out["cells"]:
+        print(f"{c['pressure']},{c['interconnect']},{c['policy']},"
+              f"{c['copy_streams']},{c['submission']},"
+              f"{c['first_victim_ttft']},{c['mean_completed_ttft']},"
+              f"{c['all_mean_ttft']},{c['makespan']},{c['steps']},"
+              f"{c['timeouts']},{c['total_preemptions']},{c['total_swaps']},"
+              f"{c.get('mean_ttft_delta_vs_recompute', '-')},"
+              f"{c.get('timeouts_delta_vs_recompute', '-')}")
+    print("-- hybrid handoff overlap (heavy split-phase load) --")
+    print("streams,submission,all_mean_ttft,makespan,completed,steps")
+    for h in out["handoff"]:
+        print(f"{h['copy_streams']},{h['submission']},{h['all_mean_ttft']},"
+              f"{h['makespan']},{h['completed']},{h['steps']}")
+    print("-- swap-vs-recompute crossover, serialized vs overlapped --")
+    for x in out["crossover"]:
+        print(f"{x['pressure']:9s} {x['interconnect']:8s}: "
+              f"serialized={'swap' if x['swap_wins_serialized'] else 'recompute'}"
+              f" overlapped={'swap' if x['swap_wins_overlapped'] else 'recompute'}"
+              + (f" starved={'swap' if x['swap_wins_starved'] else 'recompute'}"
+                 if x["swap_wins_starved"] is not None else ""))
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

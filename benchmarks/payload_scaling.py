@@ -4,7 +4,11 @@ The paper's §V-B: every step the EngineCore serializes the schedule and
 pushes it through the shm ring.  With paged KV the plan carries each
 request's block table, so the payload — and the CPU burned serializing
 it — grows with the batch and with context length.  This measures both
-on the real ``StepPlan`` encoder.
+on the real ``StepPlan`` encoder — full tables every step vs the delta
+encoding (``SchedulerConfig.delta_block_tables``, docs/copy_engine.md),
+which ships only each request's newly appended blocks: steady-state
+decode steps append at most one block per request, so the table term of
+the payload stops scaling with context length entirely.
 """
 from __future__ import annotations
 
@@ -18,12 +22,14 @@ from repro.serving.scheduler import Scheduler, SchedulerConfig
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
 
 
-def _decode_plan(batch: int, ctx_tokens: int, block_size: int = 64):
+def _decode_plan(batch: int, ctx_tokens: int, block_size: int = 64,
+                 delta: bool = False):
     """A steady-state decode step for ``batch`` requests of ``ctx_tokens``."""
     cfg = SchedulerConfig(max_num_seqs=batch, max_tokens_per_step=1 << 20,
                           prefill_chunk=1 << 20, enable_prefix_cache=False,
                           block_size=block_size,
-                          kv_capacity_tokens=2 * batch * (ctx_tokens + 64))
+                          kv_capacity_tokens=2 * batch * (ctx_tokens + 64),
+                          delta_block_tables=delta)
     sched = Scheduler(cfg)
     for i in range(batch):
         r = Request(text="", max_new_tokens=4)
@@ -35,23 +41,31 @@ def _decode_plan(batch: int, ctx_tokens: int, block_size: int = 64):
     return sched.schedule()              # the decode-only step
 
 
+def _serialize_us(plan, n_iter: int = 20) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        plan._raw = None                 # force re-serialization
+        plan.encode()
+    return (time.perf_counter() - t0) / n_iter * 1e6
+
+
 def run(write: bool = True) -> list:
     rows = []
     for ctx in (512, 2048):
         for batch in (1, 8, 32, 64):
             plan = _decode_plan(batch, ctx)
             assert plan is not None and len(plan.decode) == batch
-            t0 = time.perf_counter()
-            n_iter = 20
-            for _ in range(n_iter):
-                plan._raw = None         # force re-serialization
-                plan.encode()
-            dt = (time.perf_counter() - t0) / n_iter
+            dplan = _decode_plan(batch, ctx, delta=True)
+            assert dplan is not None and len(dplan.decode) == batch
+            full_bytes, delta_bytes = plan.payload_bytes, dplan.payload_bytes
             rows.append({
                 "ctx_tokens": ctx, "batch": batch,
-                "payload_bytes": plan.payload_bytes,
+                "payload_bytes": full_bytes,
+                "delta_payload_bytes": delta_bytes,
+                "delta_reduction": round(1 - delta_bytes / full_bytes, 3),
                 "approx_bytes": plan.approx_payload_bytes(),
-                "serialize_us": round(dt * 1e6, 1),
+                "serialize_us": round(_serialize_us(plan), 1),
+                "delta_serialize_us": round(_serialize_us(dplan), 1),
             })
     if write:
         ARTIFACTS.mkdir(parents=True, exist_ok=True)
@@ -62,10 +76,12 @@ def run(write: bool = True) -> list:
 
 def main() -> None:
     rows = run()
-    print("ctx_tokens,batch,payload_bytes,serialize_us")
+    print("ctx_tokens,batch,payload_bytes,delta_bytes,reduction,"
+          "serialize_us,delta_serialize_us")
     for r in rows:
         print(f"{r['ctx_tokens']},{r['batch']},{r['payload_bytes']},"
-              f"{r['serialize_us']}")
+              f"{r['delta_payload_bytes']},{r['delta_reduction']},"
+              f"{r['serialize_us']},{r['delta_serialize_us']}")
 
 
 if __name__ == "__main__":

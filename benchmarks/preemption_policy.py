@@ -60,13 +60,14 @@ PRESSURES = {"burst": 15.0, "sustained": 30.0}    # attack duration seconds
 
 def one_cell(policy: str, interconnect: str, prefix_cache: bool, *,
              cores: int = 9, tp: int = 4, rps: float = 10.0,
-             duration: float = 30.0) -> dict:
+             duration: float = 30.0, victim_selection: str = "lifo") -> dict:
     p = llama8b_tp4_params(cores, tp=tp, preemption_policy=policy,
                            kv_capacity_tokens=KV_CAPACITY)
     device = dataclasses.replace(p.device,
                                  t_swap_block=INTERCONNECTS[interconnect])
     sched = dataclasses.replace(p.scheduler,
                                 enable_prefix_cache=prefix_cache,
+                                victim_selection=victim_selection,
                                 **device.preemption_calibration())
     p = dataclasses.replace(p, device=device, scheduler=sched)
     res = attacker_victim_workload(
@@ -79,6 +80,7 @@ def one_cell(policy: str, interconnect: str, prefix_cache: bool, *,
         "policy": policy, "interconnect": interconnect,
         "prefix_cache": prefix_cache, "cores": cores, "tp": tp, "rps": rps,
         "kv_capacity": KV_CAPACITY,
+        "victim_selection": victim_selection,
         **victim_stats(res, p.timeout),
         "victim_preemptions": sum(r.n_preemptions for r in victims),
         "victim_swaps": sum(r.n_swaps for r in victims),
@@ -86,6 +88,37 @@ def one_cell(policy: str, interconnect: str, prefix_cache: bool, *,
         "total_swaps": sum(r.n_swaps for r in res.requests),
         "saturation_s": round(res.saturation_s, 1),
     }
+
+
+def victim_selection_cells(fast: bool = False) -> list:
+    """Cost-aware victim choice (``SchedulerConfig.victim_selection``):
+    ``cheapest`` evicts the running request whose eviction costs least
+    under the active policy — with the prefix cache on, a victim whose
+    blocks are cache-registered recomputes for free, so evicting it
+    instead of the newest admission (lifo) should spare the tail.
+    Reported per policy as (lifo, cheapest) pairs with tail deltas."""
+    policies = ("recompute",) if fast else ("recompute", "adaptive")
+    out = []
+    for policy in policies:
+        pair = {}
+        for selection in ("lifo", "cheapest"):
+            c = one_cell(policy, "pcie", True,
+                         duration=PRESSURES["burst"],
+                         victim_selection=selection)
+            c["pressure"] = "burst"
+            pair[selection] = c
+            out.append(c)
+        base, ch = pair["lifo"], pair["cheapest"]
+
+        def _d(a, b):
+            return None if (a is None or b is None) else round(a - b, 2)
+
+        ch["tail_delta_vs_lifo"] = _d(ch["max_completed_ttft"],
+                                      base["max_completed_ttft"])
+        ch["mean_delta_vs_lifo"] = _d(ch["mean_completed_ttft"],
+                                      base["mean_completed_ttft"])
+        ch["timeouts_delta_vs_lifo"] = ch["timeouts"] - base["timeouts"]
+    return out
 
 
 def run(write: bool = True, fast: bool = False) -> dict:
@@ -118,7 +151,8 @@ def run(write: bool = True, fast: bool = False) -> dict:
                             base["mean_completed_ttft"]),
                         "timeouts_delta": c["timeouts"] - base["timeouts"],
                     })
-    out = {"cells": cells, "deltas_vs_recompute": deltas}
+    out = {"cells": cells, "deltas_vs_recompute": deltas,
+           "victim_selection": victim_selection_cells(fast=fast)}
     if write:
         ARTIFACTS.mkdir(parents=True, exist_ok=True)
         (ARTIFACTS / "preemption_policy.json").write_text(
@@ -145,6 +179,16 @@ def main(fast: bool = False) -> None:
               f"{d['interconnect']:8s} "
               f"{d['policy']:9s}: mean_ttft {dt}, "
               f"timeouts {d['timeouts_delta']:+d}")
+    print("-- victim selection: lifo vs cheapest (burst, pcie, cache on) --")
+    print("policy,selection,mean_ttft,max_ttft,timeouts,preempts,swaps,"
+          "d_tail,d_mean,d_timeouts")
+    for c in out["victim_selection"]:
+        print(f"{c['policy']},{c['victim_selection']},"
+              f"{c['mean_completed_ttft']},{c['max_completed_ttft']},"
+              f"{c['timeouts']},{c['total_preemptions']},{c['total_swaps']},"
+              f"{c.get('tail_delta_vs_lifo', '-')},"
+              f"{c.get('mean_delta_vs_lifo', '-')},"
+              f"{c.get('timeouts_delta_vs_lifo', '-')}")
 
 
 if __name__ == "__main__":

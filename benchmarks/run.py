@@ -32,8 +32,13 @@ def main() -> None:
 
     from benchmarks import preemption_policy
     _section("preemption policy: recompute vs swap vs adaptive at the "
-             "KV cliff")
+             "KV cliff (+ victim selection)")
     preemption_policy.main(fast=fast)
+
+    from benchmarks import copy_overlap
+    _section("copy overlap: CPU-gated async transfers (hidden vs "
+             "starved) + crossover re-measure")
+    copy_overlap.main(fast=fast)
 
     from benchmarks import fig8_sequential_victims
     _section("fig8: sequential victim TTFT growth")

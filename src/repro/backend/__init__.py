@@ -38,27 +38,38 @@ def make_backend(name: str, *, device=None, scheduler_cfg=None,
 
     ``device`` feeds the emulated sleep model; ``scheduler_cfg`` sizes the
     physical page pools (their block ids must match the scheduler's
-    manager).  For ``"hybrid"``, ``prefill_backend``/``decode_backend``
-    name the two children; an emulated decode child gets the device's
+    manager) and carries ``copy_streams`` — the async-copy-engine switch
+    (docs/copy_engine.md), which must be the SCHEDULER's because only its
+    in-flight block holds make the backends' deferred page copies safe.
+    For ``"hybrid"``, ``prefill_backend``/``decode_backend`` name the two
+    children; an emulated decode child gets the device's
     ``cpu_tier(decode_slowdown=...)`` cost model (accelerator-class
     prefill, CPU-class decode — docs/backends.md), and the handoff is
     priced at the prefill device's swap bandwidth."""
+    import dataclasses
+
     from repro.core.devmodel import DeviceModel
     from repro.serving.scheduler import SchedulerConfig
     device = device if device is not None else DeviceModel()
     cfg = scheduler_cfg if scheduler_cfg is not None else SchedulerConfig()
+    if device.copy_streams != cfg.copy_streams:
+        # one switch, two consumers: the scheduler's epoch bookkeeping and
+        # the device cost model must see the same stream count
+        device = dataclasses.replace(device, copy_streams=cfg.copy_streams)
     if name == "emulated":
         return EmulatedBackend(device)
     if name == "jax":
         from repro.backend.jax_backend import JaxBackend
         return JaxBackend(block_size=cfg.block_size,
                           num_blocks=cfg.num_kv_blocks,
-                          num_swap_blocks=cfg.num_swap_blocks)
+                          num_swap_blocks=cfg.num_swap_blocks,
+                          copy_streams=cfg.copy_streams)
     if name == "cpu":
         from repro.backend.cpu_decode import CpuDecodeBackend
         return CpuDecodeBackend(block_size=cfg.block_size,
                                 num_blocks=cfg.num_kv_blocks,
-                                num_swap_blocks=cfg.num_swap_blocks)
+                                num_swap_blocks=cfg.num_swap_blocks,
+                                copy_streams=cfg.copy_streams)
     if name == "hybrid":
         from repro.backend.hybrid import HybridBackend
         if "hybrid" in (prefill_backend, decode_backend):
@@ -84,6 +95,8 @@ def make_backend(name: str, *, device=None, scheduler_cfg=None,
 
         return HybridBackend(child(prefill_backend, "prefill"),
                              child(decode_backend, "decode"),
-                             t_handoff_block=device.t_swap_block)
+                             t_handoff_block=device.t_swap_block,
+                             copy_streams=cfg.copy_streams,
+                             t_submit_per_copy=device.t_submit_per_copy)
     raise ValueError(f"unknown backend {name!r} "
                      f"(want one of {BACKEND_NAMES})")

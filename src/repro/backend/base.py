@@ -24,7 +24,14 @@ drives each registered backend through it):
     pages), then prefill/decode compute.  A device block freed by a
     swap-out may be reallocated — even as a restore target — in the SAME
     plan, so reordering corrupts KV.  A composite backend must preserve
-    this order within each child it routes directives to;
+    this order within each child it routes directives to.  Under the
+    async copy engine (``copy_streams >= 1``, docs/copy_engine.md) a
+    physical backend may instead DEFER the page copies to the top of its
+    next ``execute`` (the epoch boundary): the scheduler's in-flight
+    holds guarantee nothing reads or reallocates the pages meanwhile,
+    and same-plan reuse cannot occur — but the deferral must preserve
+    submission order, and ``plan.preempted``/``release`` must drop a
+    request's still-pending copies;
   * ids in ``plan.preempted`` had their KV discarded (recompute policy):
     drop any state for them.  Swapped-out requests are NOT in
     ``preempted``; their sequence state must survive until their

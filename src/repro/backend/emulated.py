@@ -4,8 +4,12 @@ This preserves the seed's measurement methodology — everything host-side
 is real, the accelerator step is a roofline-derived ``time.sleep`` — but
 behind the Backend seam, and with the device model now charged for the
 per-step control metadata too: uploading/consuming the block tables is
-per-entry work on a real worker, so bigger batches cost more than the
-three-coefficient model admitted.
+per-entry work on a real worker (per NEWLY BROADCAST entry under delta
+tables), so bigger batches cost more than the three-coefficient model
+admitted.  Swap/restore traffic is charged serialized or overlapped
+according to the device's ``copy_streams`` (the async copy engine,
+docs/copy_engine.md) — the emulated backend itself needs no deferred
+copies, the whole story lives in ``DeviceModel.step_time``.
 """
 from __future__ import annotations
 

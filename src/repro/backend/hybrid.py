@@ -36,7 +36,13 @@ Mechanics (each a contract obligation, see docs/backends.md):
     corrupt pages.
   * **Cost model** — ``step_cost`` is the virtual-time story: the tiers
     run concurrently, so a step costs ``max(prefill_cost, decode_cost)``
-    plus ``t_handoff_block`` per page crossing at a prefill completion.
+    plus ``t_handoff_block`` per page crossing at a prefill completion —
+    or, with the async copy engine (``copy_streams >= 1``,
+    docs/copy_engine.md), the handoff drains on a copy stream
+    concurrently with both tiers and only its CPU submission cost plus
+    any un-hidden drain time surfaces; physically the page copies defer
+    to the next ``execute`` (the epoch boundary — the request cannot
+    decode before then, so the deferred pages land before first read).
     It is pure (contract), so phases are derived from the plan itself:
     scheduled work is exact, swap victims carry the scheduler's phase
     tag (``plan.decode_tier_swaps`` — so a decode-tier victim's swap-out
@@ -55,6 +61,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.backend.base import PinnedLRU, StepResult
 from repro.backend.emulated import EmulatedBackend
+from repro.core.copyengine import DeferredCopies, overlapped_seconds
 from repro.serving.scheduler import StepPlan
 
 PREFILL, DECODE = "prefill", "decode"
@@ -67,10 +74,19 @@ def _sub_plan_has_work(p: StepPlan) -> bool:
 class HybridBackend:
 
     def __init__(self, prefill_backend, decode_backend, *,
-                 t_handoff_block: float = 5e-5):
+                 t_handoff_block: float = 5e-5, copy_streams: int = 0,
+                 t_submit_per_copy: float = 5e-6):
         self.prefill_backend = prefill_backend
         self.decode_backend = decode_backend
         self.t_handoff_block = t_handoff_block
+        # copy_streams >= 1: the prefill->decode handoff rides the async
+        # copy engine — its cost overlaps the tiers (minus the CPU
+        # submission charge) and the physical page copies defer to the
+        # next execute(), the epoch boundary before the request's first
+        # decode read (docs/copy_engine.md)
+        self.copy_streams = copy_streams
+        self.t_submit_per_copy = t_submit_per_copy
+        self._deferred = DeferredCopies()
         # req_id -> tier currently holding its KV pages (base.PinnedLRU:
         # the broadcast ring never announces finishes); swapped requests
         # are pinned — their tier label must survive until the restore
@@ -119,11 +135,17 @@ class HybridBackend:
         for rid, _, _ in plan.prefill:
             if rid in tables:
                 pre.block_tables[rid] = tables[rid]
+            if rid in plan.table_base:
+                # keep the delta-table bases: a child's cost model bills
+                # per NEWLY broadcast entry, same as the unified path
+                pre.table_base[rid] = plan.table_base[rid]
             if rid in plan.new_tokens:
                 pre.new_tokens[rid] = plan.new_tokens[rid]
         for rid in plan.decode:
             if rid in tables:
                 dec.block_tables[rid] = tables[rid]
+            if rid in plan.table_base:
+                dec.table_base[rid] = plan.table_base[rid]
             if rid in plan.new_tokens:
                 dec.new_tokens[rid] = plan.new_tokens[rid]
         for rid, pairs in plan.swap_outs.items():
@@ -138,27 +160,68 @@ class HybridBackend:
                         tables: Dict[int, List[int]]) -> int:
         return sum(len(tables.get(rid, [])) for rid in plan.prefill_done)
 
+    def _copy_handoff(self, rid: int, blocks: List[int],
+                      seq_len: int) -> None:
+        """Block-copy ``rid``'s pages prefill pool -> decode pool (same
+        ids — one BlockManager numbers both) and move its sequence
+        length.  Copy, not move: prefix pages must stay readable on the
+        prefill tier for later requests that lock them."""
+        src, dst = self.prefill_backend, self.decode_backend
+        dst.k_pages[:, blocks] = src.k_pages[:, blocks]
+        dst.v_pages[:, blocks] = src.v_pages[:, blocks]
+        dst._track(rid, seq_len)
+
     # -- Backend protocol ----------------------------------------------------
 
     def step_cost(self, plan: StepPlan) -> float:
         """Concurrent tiers: max of the two sub-plan costs, plus the
-        prefill->decode page handoff at interconnect cost.  Pure."""
+        prefill->decode page handoff — serialized at interconnect cost,
+        or overlapped on the copy engine's streams (only submission +
+        un-hidden drain time surfaces).  Pure."""
         pre, dec = self.split_plan(plan)
         pre_c = (self.prefill_backend.step_cost(pre)
                  if _sub_plan_has_work(pre) else 0.0)
         dec_c = (self.decode_backend.step_cost(dec)
                  if _sub_plan_has_work(dec) else 0.0)
         moved = self._handoff_blocks(plan, plan.block_tables)
-        return max(pre_c, dec_c) + moved * self.t_handoff_block
+        return overlapped_seconds(
+            max(pre_c, dec_c), moved,
+            copy_streams=self.copy_streams,
+            t_copy_block=self.t_handoff_block,
+            t_submit_per_copy=self.t_submit_per_copy)
 
     def execute(self, plan: StepPlan,
                 block_tables: Optional[Dict[int, List[int]]] = None
                 ) -> StepResult:
         tables = block_tables if block_tables is not None \
             else plan.block_tables
+        children_deferred = [
+            d for d in (getattr(c, "_deferred", None)
+                        for c in (self.prefill_backend, self.decode_backend))
+            if d is not None]
         for rid in plan.preempted:
             self._tier.pop(rid, None)
             self._swap_pinned.discard(rid)
+            # dead data: never land it late — including copies parked in
+            # a child's queue, which we flush below before that child has
+            # seen this plan's ``preempted``
+            self._deferred.drop(rid)
+            for d in children_deferred:
+                d.drop(rid)
+        # epoch boundary: copies deferred by earlier steps land before
+        # either child computes — the CHILDREN's queues explicitly,
+        # because a child whose sub-plan is empty is skipped below and
+        # would otherwise sit on pending copies past their retired epoch
+        # (the scheduler frees/reuses the source blocks at retire, so a
+        # late flush would read another request's pages).  Cross-queue
+        # order is free: every pending copy reads/writes only blocks its
+        # own request still holds.
+        for d in children_deferred:
+            d.flush()
+        # ... then the handoffs (a handed-off request decodes no earlier
+        # than the step after its prefill completed, so its pages are in
+        # place before the first decode-tier read)
+        self._deferred.flush()
         pre, dec = self.split_plan(plan, tables)
         for rid in pre.swap_outs:
             self._swap_pinned.add(rid)
@@ -196,19 +259,25 @@ class HybridBackend:
             self._remember(rid, DECODE)
 
         # prefill->decode handoff: block-copy the finished request's pages
-        # into the decode tier (same ids — one BlockManager numbers both
-        # pools) and transfer its sequence length, then forget it on the
-        # prefill side.  Copy, not move: prefix pages must stay readable
-        # on the prefill tier for later requests that lock them.
+        # into the decode tier (eagerly when serialized, at the next epoch
+        # boundary on the copy engine) and transfer its sequence length,
+        # then forget it on the prefill side.
         moved = 0
         src, dst = self.prefill_backend, self.decode_backend
         physical = hasattr(src, "k_pages") and hasattr(dst, "k_pages")
         for rid in plan.prefill_done:
             blocks = tables.get(rid, [])
             if physical and blocks:
-                dst.k_pages[:, blocks] = src.k_pages[:, blocks]
-                dst.v_pages[:, blocks] = src.v_pages[:, blocks]
-                dst._track(rid, src._seq_lens.get(rid, 0))
+                if self.copy_streams > 0:
+                    # async handoff: pages land at the next epoch
+                    # boundary — before the request's first decode read
+                    seq = src._seq_lens.get(rid, 0)
+                    self._deferred.defer(
+                        rid, lambda r=rid, b=list(blocks), s=seq:
+                        self._copy_handoff(r, b, s))
+                else:
+                    self._copy_handoff(rid, blocks,
+                                       src._seq_lens.get(rid, 0))
             if hasattr(src, "release"):
                 src.release(rid)
             moved += len(blocks)
@@ -221,9 +290,12 @@ class HybridBackend:
             tokens.update(res_pre.tokens)
         if res_dec is not None:
             tokens.update(res_dec.tokens)
-        wall = (max(res_pre.wall_s if res_pre else 0.0,
-                    res_dec.wall_s if res_dec else 0.0)
-                + moved * self.t_handoff_block)
+        wall = overlapped_seconds(
+            max(res_pre.wall_s if res_pre else 0.0,
+                res_dec.wall_s if res_dec else 0.0),
+            moved, copy_streams=self.copy_streams,
+            t_copy_block=self.t_handoff_block,
+            t_submit_per_copy=self.t_submit_per_copy)
         if sleepers:
             time.sleep(wall)       # the concurrent-tier wall, charged once
         return StepResult(step_id=plan.step_id, tokens=tokens, wall_s=wall)
@@ -235,3 +307,4 @@ class HybridBackend:
                 child.release(req_id)
         self._tier.pop(req_id, None)
         self._swap_pinned.discard(req_id)
+        self._deferred.drop(req_id)

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.backend.base import PinnedLRU, StepResult
+from repro.core.copyengine import DeferredCopies
 from repro.serving.scheduler import StepPlan
 
 
@@ -45,12 +46,19 @@ class PagedSurrogateBackend:
     """Base for backends that own physical pages (see module docstring)."""
 
     def __init__(self, *, block_size: int, num_blocks: int,
-                 num_swap_blocks: int = 0,
+                 num_swap_blocks: int = 0, copy_streams: int = 0,
                  n_heads: int = 4, n_kv_heads: int = 2, head_dim: int = 16,
                  vocab: int = 256, seed: int = 0, interpret: bool = True):
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.num_swap_blocks = num_swap_blocks
+        # copy_streams >= 1: swap/restore page copies are DEFERRED to the
+        # next execute() — the epoch boundary of the async copy engine
+        # (docs/copy_engine.md).  Safe only when the scheduler runs the
+        # matching IN_FLIGHT bookkeeping (SchedulerConfig.copy_streams),
+        # which guarantees no page is read or reallocated mid-copy.
+        self.copy_streams = copy_streams
+        self._deferred = DeferredCopies()
         self.n_heads = n_heads
         self.n_kv_heads = n_kv_heads
         self.head_dim = head_dim
@@ -116,6 +124,18 @@ class PagedSurrogateBackend:
     def _track(self, rid: int, seq_len: int) -> None:
         self._seq_lens.put(rid, seq_len)
 
+    # -- host<->device page movement -----------------------------------------
+
+    def _copy_out(self, pairs: List[tuple]) -> None:
+        for dev_b, host_b in pairs:
+            self.k_swap[:, host_b] = self.k_pages[:, dev_b]
+            self.v_swap[:, host_b] = self.v_pages[:, dev_b]
+
+    def _copy_back(self, pairs: List[tuple]) -> None:
+        for host_b, dev_b in pairs:
+            self.k_pages[:, dev_b] = self.k_swap[:, host_b]
+            self.v_pages[:, dev_b] = self.v_swap[:, host_b]
+
     # -- the batched attention step ------------------------------------------
 
     def _attend(self, q: np.ndarray, tables: np.ndarray,
@@ -141,24 +161,35 @@ class PagedSurrogateBackend:
             else plan.block_tables
         for rid in plan.preempted:
             # pages were reclaimed; also unpins a swap whose restore was
-            # cancelled by a same-step recompute preemption
+            # cancelled by a same-step recompute preemption, and discards
+            # any deferred copy whose data is now dead
             self._seq_lens.pop(rid, None)
             self._swap_pinned.discard(rid)
-        # swap directives first, in contract order (base.Backend): a device
+            self._deferred.drop(rid)
+        # epoch boundary: copies deferred by earlier steps land before
+        # anything in THIS step touches the pools (the scheduler's
+        # in-flight holds kept their pages unreallocated meanwhile)
+        self._deferred.flush()
+        # swap directives next, in contract order (base.Backend): a device
         # block freed by a swap-out may be reallocated — even as a restore
-        # target — within this very plan.  Swapped requests keep their
-        # _seq_lens entry (pinned against LRU churn): their sequence
-        # survives, only its pages move.
+        # target — within this very plan (serialized mode; with the copy
+        # engine the directives defer to the next epoch boundary instead).
+        # Swapped requests keep their _seq_lens entry (pinned against LRU
+        # churn): their sequence survives, only its pages move.
         for rid, pairs in plan.swap_outs.items():
             self._swap_pinned.add(rid)
-            for dev_b, host_b in pairs:
-                self.k_swap[:, host_b] = self.k_pages[:, dev_b]
-                self.v_swap[:, host_b] = self.v_pages[:, dev_b]
+            if self.copy_streams > 0:
+                self._deferred.defer(
+                    rid, lambda p=pairs: self._copy_out(p))
+            else:
+                self._copy_out(pairs)
         for rid, pairs in plan.restores.items():
             self._swap_pinned.discard(rid)
-            for host_b, dev_b in pairs:
-                self.k_pages[:, dev_b] = self.k_swap[:, host_b]
-                self.v_pages[:, dev_b] = self.v_swap[:, host_b]
+            if self.copy_streams > 0:
+                self._deferred.defer(
+                    rid, lambda p=pairs: self._copy_back(p))
+            else:
+                self._copy_back(pairs)
 
         rows: List[tuple] = []                # (rid, q_token, seq_len, table)
         for rid, start, n in plan.prefill:
@@ -204,3 +235,4 @@ class PagedSurrogateBackend:
         scheduler's block manager, nothing to free here)."""
         self._seq_lens.pop(req_id, None)
         self._swap_pinned.discard(req_id)
+        self._deferred.drop(req_id)

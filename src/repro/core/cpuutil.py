@@ -20,6 +20,12 @@ class CpuSampler:
     def __init__(self, interval: float = 0.05):
         self.interval = interval
         self.samples: List[Tuple[float, float]] = []   # (t, busy_frac)
+        # actual wall seconds each sample covers: under CPU starvation —
+        # the very regime this sampler exists to measure — the sampling
+        # thread itself gets descheduled and wakes late, so assuming
+        # ``interval`` per sample undercounts saturated time exactly when
+        # it matters most
+        self._spans: List[float] = []
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
 
@@ -33,13 +39,16 @@ class CpuSampler:
 
     def _run(self) -> None:
         total0, idle0 = _read_proc_stat()
+        t_prev = time.perf_counter()
         while not self._stop.wait(self.interval):
             total1, idle1 = _read_proc_stat()
+            now = time.perf_counter()
             dt, di = total1 - total0, idle1 - idle0
             if dt > 0:
-                self.samples.append(
-                    (time.perf_counter(), 1.0 - di / dt))
+                self.samples.append((now, 1.0 - di / dt))
+                self._spans.append(now - t_prev)
             total0, idle0 = total1, idle1
+            t_prev = now
 
     def stop(self) -> None:
         self._stop.set()
@@ -47,8 +56,12 @@ class CpuSampler:
             self._thread.join(timeout=2.0)
 
     def saturation_seconds(self, threshold: float = 0.95) -> float:
-        """Total time spent at >= threshold utilization (Fig. 10 metric)."""
-        return sum(self.interval for _, b in self.samples if b >= threshold)
+        """Total time spent at >= threshold utilization (Fig. 10 metric),
+        weighted by each sample's measured inter-sample wall time, not
+        the nominal interval (late wake-ups stretch the window a busy
+        sample covers)."""
+        return sum(span for (_, b), span in zip(self.samples, self._spans)
+                   if b >= threshold)
 
 
 def cpu_budget(n_cores: int) -> int:

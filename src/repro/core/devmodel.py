@@ -5,21 +5,32 @@ container the workers *emulate* it (time.sleep) with a latency model whose
 coefficients are derived from the dry-run roofline terms — so control-plane
 experiments see realistic device-step durations per architecture.
 
-step_time = t_fixed + prefill_tokens * t_prefill_tok + n_decode * t_decode_seq
-          + block_table_entries * t_block_entry + swapped_blocks * t_swap_block
+compute   = t_fixed + prefill_tokens * t_prefill_tok + n_decode * t_decode_seq
+          + new_block_table_entries * t_block_entry
+step_time = compute + swapped_blocks * t_swap_block            (copy_streams=0)
+          | swapped_blocks * t_submit_per_copy
+            + max(compute, swapped_blocks * t_swap_block
+                           / copy_streams)                     (copy_streams>=1)
 
 The block-table term models the per-step metadata upload PagedAttention
-adds: every entry of every scheduled request's table is consumed by the
-device each step, so batch growth costs more than the three-coefficient
-seed model admitted.  The swap term charges host<->device KV block copies
-(swap-to-host preemption + restore, docs/preemption.md): per block moved
-in either direction, at interconnect bandwidth — the quantity the
-adaptive preemption policy trades against recompute FLOPs.
+adds: every *newly broadcast* entry of every scheduled request's table is
+consumed by the device each step (with delta tables only the appended
+tail ships, docs/copy_engine.md), so batch growth costs more than the
+three-coefficient seed model admitted.  The swap term charges
+host<->device KV block copies (swap-to-host preemption + restore,
+docs/preemption.md): per block moved in either direction, at
+interconnect bandwidth — the quantity the adaptive preemption policy
+trades against recompute FLOPs.  With ``copy_streams >= 1`` those copies
+ride the async copy engine (repro.core.copyengine): they drain
+concurrently with compute and only the CPU submission cost plus any
+un-hidden drain time surfaces in the step — degrading back to the
+serialized sum as ``t_submit_per_copy`` grows (CPU starvation).
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro.core.copyengine import overlapped_seconds
 from repro.serving.scheduler import StepPlan
 
 
@@ -31,14 +42,22 @@ class DeviceModel:
     t_block_entry: float = 2e-8     # per KV block-table entry in the plan
     t_swap_block: float = 5e-5      # per KV block copied host<->device
     max_step: float = 1.0
+    # -- async copy engine (repro.core.copyengine, docs/copy_engine.md) --
+    # 0 = serialized copies (the pre-engine model: transfers charged
+    # inline); >= 1 DMA-style streams drain swap traffic concurrently
+    # with compute, leaving only CPU submission + un-hidden drain time.
+    copy_streams: int = 0
+    t_submit_per_copy: float = 5e-6  # CPU seconds to submit one descriptor
 
     def step_time(self, plan: StepPlan) -> float:
         pre = sum(l for _, _, l in plan.prefill)
-        n_entries = sum(len(t) for t in plan.block_tables.values())
-        t = (self.t_fixed + pre * self.t_prefill_tok
-             + len(plan.decode) * self.t_decode_seq
-             + n_entries * self.t_block_entry
-             + plan.n_swapped_blocks * self.t_swap_block)
+        compute = (self.t_fixed + pre * self.t_prefill_tok
+                   + len(plan.decode) * self.t_decode_seq
+                   + plan.n_new_table_entries * self.t_block_entry)
+        t = overlapped_seconds(
+            compute, plan.n_swapped_blocks,
+            copy_streams=self.copy_streams, t_copy_block=self.t_swap_block,
+            t_submit_per_copy=self.t_submit_per_copy)
         return min(t, self.max_step)
 
     def preemption_calibration(self) -> dict:
@@ -46,6 +65,13 @@ class DeviceModel:
         swap round-trips vs recompute with THIS device's coefficients."""
         return {"t_swap_block": self.t_swap_block,
                 "t_recompute_token": self.t_prefill_tok}
+
+    def copy_calibration(self) -> dict:
+        """SchedulerConfig kwargs enabling the scheduler's in-flight
+        transfer bookkeeping with THIS device's copy-engine shape (the
+        scheduler's ``copy_streams`` must match the device's, or the
+        cost model and the block-hold epochs would disagree)."""
+        return {"copy_streams": self.copy_streams}
 
     def cpu_tier(self, *, decode_slowdown: float = 8.0,
                  prefill_slowdown: float = 40.0,

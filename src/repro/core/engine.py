@@ -27,7 +27,8 @@ from typing import Any, Dict, List, Optional
 from repro.core.devmodel import DeviceModel
 from repro.core.shm_broadcast import CompletionBoard, ShmBroadcastQueue
 from repro.serving.request import Request, RequestState
-from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
+from repro.serving.scheduler import (BlockTableTracker, Scheduler,
+                                     SchedulerConfig, StepPlan)
 from repro.tokenizer.bpe import BPETokenizer, default_tokenizer
 from repro.tokenizer.pool import TokenizerPool
 
@@ -204,12 +205,14 @@ def _worker(cfg: EngineConfig, idx: int, ring_name: str, board_name: str,
                            prefill_backend=cfg.prefill_backend,
                            decode_backend=cfg.decode_backend,
                            decode_slowdown=cfg.decode_slowdown)
+    tables = BlockTableTracker()      # delta plans -> full tables
     while True:
         payload, _ = reader.dequeue(timeout=600.0,
                                     yield_every=cfg.yield_every)
         plan = StepPlan.decode_bytes(payload)
         if plan.step_id < 0:
             break
+        tables.expand(plan)
         backend.execute(plan)             # accelerator executes
         board.mark(idx, plan.step_id)
     stats_q.put({

@@ -69,6 +69,23 @@ def main() -> None:
     ap.add_argument("--swap-capacity", type=int, default=0,
                     help="host swap tier size in token slots "
                          "(default: same as --kv-capacity)")
+    ap.add_argument("--copy-streams", type=int, default=0,
+                    help="async copy engine (docs/copy_engine.md): number "
+                         "of DMA-style streams hiding swap/restore and "
+                         "hybrid-handoff transfers behind compute; 0 = "
+                         "serialized transfers (charged inline)")
+    ap.add_argument("--t-submit-per-copy", type=float, default=5e-6,
+                    help="CPU seconds to submit one copy descriptor — the "
+                         "CPU-starvation knob: large values erode the "
+                         "overlap back to the serialized cost")
+    ap.add_argument("--victim-selection", default="lifo",
+                    choices=("lifo", "cheapest"),
+                    help="preemption victim choice: most recently admitted "
+                         "(lifo, vLLM-style) or cheapest-to-evict under "
+                         "the active policy")
+    ap.add_argument("--no-delta-tables", action="store_true",
+                    help="broadcast full per-request block tables every "
+                         "step instead of the delta encoding")
     ap.add_argument("--ring-slot-bytes", type=int, default=0,
                     help="override the auto-sized broadcast slot")
     ap.add_argument("--devmodel", default=None,
@@ -97,6 +114,9 @@ def main() -> None:
     else:
         device = DeviceModel(t_fixed=1e-3, t_prefill_tok=1e-6,
                              t_decode_seq=2e-5)
+    import dataclasses
+    device = dataclasses.replace(device, copy_streams=args.copy_streams,
+                                 t_submit_per_copy=args.t_submit_per_copy)
     cfg = EngineConfig(
         tp_degree=args.tp, pool_width=args.pool_width,
         scheduler=SchedulerConfig(
@@ -105,11 +125,14 @@ def main() -> None:
             preemption_policy=args.preemption_policy,
             swap_capacity_tokens=args.swap_capacity or args.kv_capacity,
             max_decode_seqs=args.max_decode_seqs,
+            victim_selection=args.victim_selection,
+            delta_block_tables=not args.no_delta_tables,
             t_swap_block_decode=(
                 device.cpu_tier(
                     decode_slowdown=args.decode_slowdown).t_swap_block
                 if args.backend == "hybrid" else -1.0),
-            **device.preemption_calibration()),
+            **device.preemption_calibration(),
+            **device.copy_calibration()),
         device=device, backend=args.backend,
         prefill_backend=args.prefill_backend,
         decode_backend=args.decode_backend,
@@ -123,7 +146,9 @@ def main() -> None:
                          f"{args.decode_backend}->decode]")
     print(f"[serve] tp={args.tp} cores={got} pool={args.pool_width} "
           f"backend={backend_desc} async_sched={args.async_sched} "
-          f"preemption={args.preemption_policy}")
+          f"preemption={args.preemption_policy} "
+          f"victims={args.victim_selection} "
+          f"copy_streams={args.copy_streams}")
     text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
 
     sys_ = ServingSystem(cfg).start()

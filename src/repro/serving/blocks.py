@@ -39,6 +39,13 @@ Refcount rules (the invariants every caller relies on):
   * ``swap_out`` moves a request's device references to host references
     atomically (all blocks or none); host references are dropped by
     ``swap_in`` or ``swap_release``, never both;
+  * under the async copy engine (docs/copy_engine.md) the blocks a
+    transfer reads stay IN_FLIGHT until its epoch retires:
+    ``swap_out(..., defer_free=True)`` keeps the device references alive
+    (released later by ``finish_swap_out``) and
+    ``swap_in(..., defer_release=True)`` keeps the host ownership alive
+    (released later via ``swap_space.release``) — so a page being copied
+    can never be reallocated, and hence never overwritten, mid-copy;
   * device copies of swapped-out cached blocks are demoted to the cold
     end of the LRU — they are the cheapest eviction candidates since
     the host tier also holds their contents.
@@ -237,8 +244,9 @@ class BlockManager:
 
     # -- swap tier -----------------------------------------------------------
 
-    def swap_out(self, req_id: int,
-                 block_table: Sequence[int]) -> Optional[List[Tuple[int, int]]]:
+    def swap_out(self, req_id: int, block_table: Sequence[int], *,
+                 defer_free: bool = False
+                 ) -> Optional[List[Tuple[int, int]]]:
         """Move ``req_id``'s device references to the host tier.
 
         Reserves one host block per device block (all-or-nothing; None
@@ -247,31 +255,52 @@ class BlockManager:
         directives the backends execute *before* any block reuse in the
         same step.  Device blocks this request had registered in the
         prefix cache stay evictable — but are demoted to the cold (LRU)
-        end, since their contents now also live on host."""
+        end, since their contents now also live on host.
+
+        ``defer_free=True`` (async copy engine): the device references
+        are NOT dropped — the copy is in flight, so the source pages
+        must stay unreallocatable until the transfer's epoch retires and
+        the caller runs ``finish_swap_out``."""
         if self.swap_space is None:
             return None
         host = self.swap_space.allocate(req_id, len(block_table))
         if host is None:
             return None
         pairs = list(zip(block_table, host))
+        if not defer_free:
+            self.finish_swap_out(block_table)
+        return pairs
+
+    def finish_swap_out(self, block_table: Sequence[int]) -> None:
+        """Release a swap-out's source device blocks (inline for the
+        serialized path; the copy engine's retire action for a deferred
+        one): drop the references, then demote any still-cached copies
+        to the cold LRU end — the host tier holds their contents too,
+        so they are the cheapest eviction candidates."""
         self.free(block_table)
         for b in block_table:
             if b in self._evictable:       # cheapest eviction candidate now
                 self._evictable.move_to_end(b, last=False)
-        return pairs
 
-    def swap_in(self, req_id: int) -> Optional[List[Tuple[int, int]]]:
+    def swap_in(self, req_id: int, *, defer_release: bool = False
+                ) -> Optional[List[Tuple[int, int]]]:
         """Bring a swapped request back: allocate fresh device blocks for
         its host blocks and release the host tier.  Returns the
         ``(host_block, device_block)`` restore directives (None — with no
         side effects — when the device pool cannot fit the table; the
-        caller retries on a later step)."""
+        caller retries on a later step).
+
+        ``defer_release=True`` (async copy engine): host ownership is
+        kept — the restore copy still reads those host pages — until the
+        transfer's epoch retires and the caller releases via
+        ``swap_space.release(req_id)``."""
         assert self.swap_space is not None
         host = self.swap_space.blocks_of(req_id)
         dev = self.allocate(len(host))
         if dev is None:
             return None
-        self.swap_space.release(req_id)
+        if not defer_release:
+            self.swap_space.release(req_id)
         return list(zip(host, dev))
 
     def swap_release(self, req_id: int) -> None:

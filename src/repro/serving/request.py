@@ -17,6 +17,9 @@ class RequestState(enum.Enum):
     DECODING = "decoding"
     SWAPPED = "swapped"            # KV parked in the host tier (preempted
                                    # by swap, awaiting re-admission)
+    RESTORING = "restoring"        # restore copy in flight on the async
+                                   # copy engine; re-enters the batch when
+                                   # its epoch completes (docs/copy_engine.md)
     FINISHED = "finished"
     TIMED_OUT = "timed_out"
 

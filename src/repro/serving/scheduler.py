@@ -20,7 +20,18 @@ whole-sequence capture cannot remove the CPU from the loop — paper §II-A③):
     docs/preemption.md);
   * swapped requests are re-admitted ahead of fresh prefill work as soon
     as device blocks free up — the plan carries their (host, device)
-    restore directives so the backends copy the pages back;
+    restore directives so the backends copy the pages back.  With the
+    async copy engine enabled (``copy_streams >= 1``,
+    docs/copy_engine.md) the restore is IN_FLIGHT for one step: the
+    request parks in ``RESTORING`` and only re-enters the batch when its
+    transfer's epoch completes, and a swap-out victim's source blocks
+    stay held until the copy-out lands — so no page is ever read before
+    its copy completes, and a freed block can never be reallocated
+    mid-transfer;
+  * the preemption victim is picked by ``victim_selection``: ``lifo``
+    (most recently admitted, vLLM-style) or ``cheapest`` (the running
+    request whose eviction costs least under the active policy —
+    cache-resumable recomputes and short swap round-trips go first);
   * refcounted prefix-cache blocks let identical prompt prefixes skip
     prefill work (attackers in the paper's experiment send identical
     prompts — vLLM's prefix caching is on by default, so we model it too).
@@ -33,6 +44,7 @@ engine's does (paper §V-B).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 from typing import Dict, List, Optional, Tuple
@@ -40,7 +52,13 @@ from typing import Dict, List, Optional, Tuple
 from repro.serving.blocks import BlockManager, HostSwapSpace, chain_key
 from repro.serving.request import Request, RequestState
 
+# transfer kinds for the async copy engine (mirrors repro.core.copyengine,
+# which cannot be imported at module level: repro.core.__init__ pulls in
+# devmodel, which imports this module)
+SWAP_OUT, RESTORE = "swap_out", "restore"
+
 PREEMPTION_POLICIES = ("recompute", "swap", "adaptive")
+VICTIM_SELECTIONS = ("lifo", "cheapest")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,12 +99,37 @@ class SchedulerConfig:
     # the admitted may *decode* in one step, round-robin so none starve.
     # 0 = uncapped (unified execution).
     max_decode_seqs: int = 0
+    # -- async copy engine (repro.core.copyengine, docs/copy_engine.md) --
+    # 0 = serialized transfers (pre-engine behavior: a restore and the
+    # restored request's compute ride one plan, swap-out sources free
+    # immediately).  >= 1: swap/restore copies get completion epochs —
+    # the blocks they touch stay IN_FLIGHT until the submitting step
+    # executes, and a restored request parks in RESTORING for that step.
+    # Must match the executing DeviceModel's ``copy_streams`` (wire it
+    # from ``DeviceModel.copy_calibration()``).
+    copy_streams: int = 0
+    # -- preemption victim choice (ROADMAP follow-on) -------------------
+    #   lifo     — evict the most recently admitted running request
+    #              (vLLM-style priority order);
+    #   cheapest — evict the running request whose eviction is cheapest
+    #              under the active policy (re-prefill seconds of its
+    #              non-cache-resumable tokens vs its swap round trip).
+    victim_selection: str = "lifo"
+    # -- delta block tables (docs/copy_engine.md) -----------------------
+    # Broadcast only the newly appended blocks of each request's table
+    # per step (plus a resync-safe base count); workers reconstruct via
+    # ``BlockTableTracker``.  False = every plan ships full tables.
+    delta_block_tables: bool = True
 
     def __post_init__(self):
         if self.preemption_policy not in PREEMPTION_POLICIES:
             raise ValueError(
                 f"preemption_policy={self.preemption_policy!r} "
                 f"(want one of {PREEMPTION_POLICIES})")
+        if self.victim_selection not in VICTIM_SELECTIONS:
+            raise ValueError(
+                f"victim_selection={self.victim_selection!r} "
+                f"(want one of {VICTIM_SELECTIONS})")
 
     @property
     def num_kv_blocks(self) -> int:
@@ -132,6 +175,13 @@ class StepPlan:
     # max_decode_seqs cap, so the phase is otherwise unrecoverable from
     # the plan.
     decode_tier_swaps: List[int] = dataclasses.field(default_factory=list)
+    # delta block tables: table_base[rid] = how many leading entries of
+    # rid's table the workers already hold (tables are append-only
+    # between resets, and every reset path clears the sent-count, so the
+    # known prefix is always valid).  ``block_tables`` above always
+    # holds FULL tables in-process; only ``encode`` ships the tail —
+    # ``BlockTableTracker.expand`` rebuilds full tables after decode.
+    table_base: Dict[int, int] = dataclasses.field(default_factory=dict)
     _raw: Optional[bytes] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -145,24 +195,42 @@ class StepPlan:
         return (sum(len(p) for p in self.swap_outs.values())
                 + sum(len(p) for p in self.restores.values()))
 
+    @property
+    def n_new_table_entries(self) -> int:
+        """Block-table entries actually broadcast this step (the delta
+        under delta encoding; the full tables otherwise) — the quantity
+        the per-entry device upload cost scales with."""
+        return sum(len(t) - self.table_base.get(rid, 0)
+                   for rid, t in self.block_tables.items())
+
     def encode(self) -> bytes:
         if self._raw is None:
-            self._raw = json.dumps({
+            payload = {
                 "step": self.step_id,
                 "prefill": self.prefill,
                 "decode": self.decode,
                 "preempted": self.preempted,
-                "block_tables": self.block_tables,
+                # only the unsent tail ships; table_base carries the
+                # worker-known prefix length for reconstruction
+                "block_tables": {
+                    rid: t[self.table_base.get(rid, 0):]
+                    for rid, t in self.block_tables.items()},
                 "new_tokens": self.new_tokens,
                 "swap_outs": self.swap_outs,
                 "restores": self.restores,
                 "prefill_done": self.prefill_done,
                 "decode_tier_swaps": self.decode_tier_swaps,
-            }).encode()
+            }
+            if self.table_base:
+                payload["table_base"] = self.table_base
+            self._raw = json.dumps(payload).encode()
         return self._raw
 
     @classmethod
     def decode_bytes(cls, raw: bytes) -> "StepPlan":
+        """Rebuild a plan from the wire.  ``block_tables`` holds only the
+        delta tails until ``BlockTableTracker.expand`` reconstructs the
+        full tables from the reader's history."""
         d = json.loads(raw)
         return cls(d["step"], [tuple(p) for p in d["prefill"]],
                    d["decode"], d["preempted"],
@@ -173,7 +241,9 @@ class StepPlan:
                    {int(k): [tuple(p) for p in v]
                     for k, v in d.get("restores", {}).items()},
                    d.get("prefill_done", []),
-                   d.get("decode_tier_swaps", []))
+                   d.get("decode_tier_swaps", []),
+                   table_base={int(k): v
+                               for k, v in d.get("table_base", {}).items()})
 
     @property
     def payload_bytes(self) -> int:
@@ -185,15 +255,56 @@ class StepPlan:
         real serialization inside simulated sweeps)."""
         if self._raw is not None:
             return len(self._raw)
-        n_bt = sum(len(t) for t in self.block_tables.values())
+        n_bt = self.n_new_table_entries        # only the delta tail ships
         n_nt = sum(len(t) for t in self.new_tokens.values())
         return (96 + 18 * len(self.prefill) + 8 * len(self.decode)
                 + 8 * len(self.preempted) + 7 * n_bt + 9 * n_nt
                 + 12 * (len(self.block_tables) + len(self.new_tokens))
+                + 14 * len(self.table_base)
                 + 14 * self.n_swapped_blocks
                 + 12 * (len(self.swap_outs) + len(self.restores))
                 + 8 * len(self.prefill_done)
                 + 8 * len(self.decode_tier_swaps))
+
+
+class BlockTableTracker:
+    """Reader-side reconstruction of delta-encoded block tables.
+
+    Each worker keeps the last full table it saw per request; a decoded
+    plan's ``block_tables[rid]`` holds only the appended tail and
+    ``table_base[rid]`` says how long the known prefix is.  ``expand``
+    rebuilds the full tables in place, so everything downstream of the
+    ring (backends, device models) keeps seeing complete tables.  The
+    scheduler resends a FULL table (base 0) after every reset — preempt,
+    swap-out, restore, finish — so history can never go stale; entries
+    are LRU-bounded well above ``max_num_seqs`` (finished requests are
+    never announced on the one-way ring, they just age out).
+    """
+
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self._tables: "collections.OrderedDict[int, List[int]]" = \
+            collections.OrderedDict()
+
+    def expand(self, plan: "StepPlan") -> "StepPlan":
+        for rid in plan.preempted:
+            self._tables.pop(rid, None)
+        for rid, tail in list(plan.block_tables.items()):
+            base = plan.table_base.get(rid, 0)
+            if base:
+                known = self._tables.get(rid, [])
+                assert len(known) >= base, (
+                    f"delta plan for req {rid} assumes {base} known "
+                    f"entries, reader holds {len(known)}")
+                full = known[:base] + tail
+            else:
+                full = list(tail)
+            plan.block_tables[rid] = full
+            self._tables[rid] = full
+            self._tables.move_to_end(rid)
+        while len(self._tables) > self.max_entries:
+            self._tables.popitem(last=False)
+        return plan
 
 
 class Scheduler:
@@ -202,9 +313,25 @@ class Scheduler:
         self.waiting: List[Request] = []
         self.running: List[Request] = []
         self.swapped: List[Request] = []   # swapped out, FIFO re-admission
+        # restore copy in flight (async copy engine): re-enters running
+        # when the transfer's epoch retires, never victimizable meanwhile
+        self.restoring: List[Request] = []
         # aborted-while-swapped rids awaiting a state-drop notice to the
         # workers (shipped via the next broadcast plan's ``preempted``)
         self._dropped_while_swapped: List[int] = []
+        # in-flight transfer bookkeeping (None = serialized transfers)
+        self.copies = None
+        if cfg.copy_streams > 0:
+            from repro.core.copyengine import CopyEngine
+            self.copies = CopyEngine(cfg.copy_streams)
+        # a compute allocation was parked last step waiting on deferred
+        # frees: give it first claim on the landed blocks before the
+        # swapped queue restores into them (else restores starve compute
+        # forever and every round trip is futile — see step 0 below)
+        self._defer_pending = False
+        # delta block tables: entries of each rid's table already
+        # broadcast (cleared on every table reset so deltas stay valid)
+        self._sent_blocks: Dict[int, int] = {}
         # round-robin cursor over decoders when max_decode_seqs caps the
         # decode tier (fairness: the cap must not starve the tail)
         self._decode_cursor = 0
@@ -250,10 +377,18 @@ class Scheduler:
         """Token slots in blocks referenced by live requests."""
         return self.blocks.used_blocks * self.cfg.block_size
 
+    def _blocks_needed(self, req: Request, n_tokens: int) -> int:
+        """New blocks ``req`` must acquire to hold ``n_tokens`` more
+        slots — the ONE accounting both `_alloc_slots` and the parking
+        guard in `_allocate_with_preemption` use (parking on in-flight
+        frees is only sound against the same ceiling allocation uses)."""
+        bs = self.cfg.block_size
+        return (-(-(req.kv_slots + n_tokens) // bs)) - len(req.block_table)
+
     def _alloc_slots(self, req: Request, n_tokens: int) -> bool:
         """Grow ``req``'s block table to hold ``n_tokens`` more slots."""
         bs = self.cfg.block_size
-        need = (-(-(req.kv_slots + n_tokens) // bs)) - len(req.block_table)
+        need = self._blocks_needed(req, n_tokens)
         if need > 0:
             got = self.blocks.allocate(need)
             if got is None:
@@ -268,6 +403,7 @@ class Scheduler:
         req.block_table = []
         req.kv_slots = 0
         req.kv_allocated = 0
+        self._sent_blocks.pop(req.req_id, None)   # next broadcast is full
 
     def _drop_from_plan(self, victim: Request, plan: StepPlan) -> int:
         """Remove ``victim``'s scheduled work from ``plan``; returns the
@@ -296,42 +432,57 @@ class Scheduler:
         plan.prefill = kept
         return refund
 
+    def _victim_price(self, victim: Request) -> Tuple[str, float]:
+        """(action, modeled cost in seconds) the active policy picks for
+        evicting ``victim`` — the ONE pricing both `_choose_preemption`
+        and `_eviction_cost` consult, so the victim chosen as cheapest
+        is priced exactly as its eviction will be.
+
+        Recompute prices the re-prefill of the victim's computed prompt
+        tokens; tokens in blocks it has registered in the prefix cache
+        are priced at zero: its blocks turn evictable, not free, so
+        re-admission usually re-locks them (optimistic — sustained
+        pressure can reclaim them first, docs/preemption.md).  Recompute
+        also drops generated-token KV for free, the same emulation
+        optimism _preempt_recompute documents.  Swap prices the
+        round-trip transfer, tier-aware (docs/backends.md): a DECODING
+        victim's pages live on the decode (CPU) tier under a hybrid
+        backend, where the round trip is a host-local copy.  Swap is off
+        the table when there is no host tier, nothing computed, or the
+        host pool cannot hold the victim's blocks; the adaptive policy
+        additionally demands the round trip beat recompute by
+        ``swap_margin``."""
+        cfg = self.cfg
+        resumable = (len(victim.block_hashes) * cfg.block_size
+                     if cfg.enable_prefix_cache else 0)
+        recompute_cost = (max(victim.prefilled - resumable, 0)
+                          * cfg.t_recompute_token)
+        swap = self.blocks.swap_space
+        if (cfg.preemption_policy == "recompute" or swap is None
+                or not victim.block_table
+                or not swap.can_hold(len(victim.block_table))):
+            return "recompute", recompute_cost
+        t_swap = cfg.t_swap_block
+        if (victim.state == RequestState.DECODING
+                and cfg.t_swap_block_decode >= 0):
+            t_swap = cfg.t_swap_block_decode
+        swap_cost = 2 * len(victim.block_table) * t_swap
+        if cfg.preemption_policy == "swap":
+            return "swap", swap_cost
+        if swap_cost * cfg.swap_margin < recompute_cost:
+            return "swap", swap_cost
+        return "recompute", recompute_cost
+
     def _choose_preemption(self, victim: Request, plan: StepPlan) -> str:
         """Pick recompute vs swap for this victim (cfg.preemption_policy).
 
-        Falls back to recompute when swap is impossible: no host tier,
-        host pool full, nothing computed yet, or the victim was restored
-        in this very plan (its device pages would be copied out *before*
-        the restore that fills them — backends apply swap_outs first)."""
-        swap = self.blocks.swap_space
-        if (swap is None or not victim.block_table
-                or victim.req_id in plan.restores
-                or not swap.can_hold(len(victim.block_table))):
+        One plan-local guard on top of `_victim_price`: a victim
+        restored in this very plan cannot swap — its device pages would
+        be copied out *before* the restore that fills them (backends
+        apply swap_outs first)."""
+        if victim.req_id in plan.restores:
             return "recompute"
-        if self.cfg.preemption_policy == "swap":
-            return "swap"
-        # adaptive: round-trip transfer vs re-prefilling the computed
-        # prompt tokens.  Tokens in blocks the victim has registered in
-        # the prefix cache are priced at zero: its blocks turn evictable,
-        # not free, so re-admission usually re-locks them (optimistic —
-        # sustained pressure can reclaim them first, docs/preemption.md).
-        # Recompute also drops generated-token KV for free, the same
-        # emulation optimism _preempt_recompute documents.
-        # Tier-aware pricing (docs/backends.md): the transfer is billed
-        # against the tier that holds the victim's KV — a DECODING
-        # victim's pages live on the decode (CPU) tier under a hybrid
-        # backend, where the round trip is a host-local copy.
-        t_swap = self.cfg.t_swap_block
-        if (victim.state == RequestState.DECODING
-                and self.cfg.t_swap_block_decode >= 0):
-            t_swap = self.cfg.t_swap_block_decode
-        resumable = (len(victim.block_hashes) * self.cfg.block_size
-                     if self.cfg.enable_prefix_cache else 0)
-        swap_cost = 2 * len(victim.block_table) * t_swap
-        recompute_cost = (max(victim.prefilled - resumable, 0)
-                          * self.cfg.t_recompute_token)
-        return ("swap" if swap_cost * self.cfg.swap_margin < recompute_cost
-                else "recompute")
+        return self._victim_price(victim)[0]
 
     def _preempt(self, victim: Request, plan: StepPlan) -> int:
         """Evict ``victim`` under the configured policy; returns the token
@@ -342,6 +493,39 @@ class Scheduler:
         else:
             self._preempt_recompute(victim, plan)
         return refund
+
+    def _eviction_cost(self, victim: Request) -> float:
+        """Modeled seconds lost by evicting ``victim``: `_victim_price`'s
+        cost, with two corrections that keep "cheapest" from
+        degenerating into "evict the same request forever" (a fully
+        cache-resumable victim models as free, so without them it is
+        re-evicted on every allocation and its tail latency explodes):
+        a floor of one block's re-prefill (the un-registered partial
+        tail plus re-admission work every eviction really pays), and
+        aging — each prior eviction inflates the modeled cost, so
+        serial evictions rotate instead of starving one request."""
+        _, cost = self._victim_price(victim)
+        floor = self.cfg.block_size * self.cfg.t_recompute_token
+        return (max(cost, floor)
+                * (1.0 + victim.n_preemptions + victim.n_swaps))
+
+    def _pick_victim(self, req: Request) -> Request:
+        """The next preemption victim.  ``lifo``: the most recently
+        admitted running request.  ``cheapest``: the running request
+        (other than ``req``, while any other holds blocks) whose
+        eviction is cheapest under the active policy, ties broken
+        toward the youngest admission — so FIFO fairness is the
+        tie-break, not the rule."""
+        if self.cfg.victim_selection == "lifo" or len(self.running) == 1:
+            return self.running[-1]
+        candidates = [r for r in self.running
+                      if r is not req and r.block_table]
+        if not candidates:
+            return self.running[-1]
+        index_of = {id(r): i for i, r in enumerate(self.running)}
+        return min(candidates,
+                   key=lambda r: (self._eviction_cost(r),
+                                  -index_of[id(r)]))
 
     def _preempt_recompute(self, victim: Request, plan: StepPlan) -> None:
         """Preemption by recompute: drop ``victim``'s KV and requeue it at
@@ -372,10 +556,23 @@ class Scheduler:
         (directives ride the plan; backends copy before any reuse) and
         park it on the swapped queue.  Its computed state — prefilled
         count, block hashes, generated tokens — survives; re-admission
-        restores the pages instead of recomputing them."""
-        pairs = self.blocks.swap_out(victim.req_id, victim.block_table)
+        restores the pages instead of recomputing them.
+
+        With the async copy engine the copy-out is IN_FLIGHT until its
+        epoch retires: the source device blocks stay held (unallocatable)
+        and are only freed by the transfer's completion action — so the
+        backends may defer the physical copy to the epoch boundary
+        without any risk of the pages being overwritten first."""
+        pairs = self.blocks.swap_out(victim.req_id, victim.block_table,
+                                     defer_free=self.copies is not None)
         assert pairs is not None       # _choose_preemption checked capacity
         plan.swap_outs[victim.req_id] = pairs
+        if self.copies is not None:
+            src_blocks = list(victim.block_table)
+            self.copies.submit(
+                plan.step_id, SWAP_OUT, victim.req_id, len(pairs),
+                on_complete=lambda: self.blocks.finish_swap_out(src_blocks))
+        self._sent_blocks.pop(victim.req_id, None)
         if victim.state == RequestState.DECODING:
             # phase tag: split-phase backends route/bill this swap-out
             # against the decode tier, matching _choose_preemption's
@@ -391,12 +588,35 @@ class Scheduler:
 
     def _allocate_with_preemption(self, req: Request, n_tokens: int,
                                   plan: StepPlan) -> Tuple[bool, int]:
-        """Allocate slots for ``req``, preempting the most recently admitted
-        running requests until it fits.  Returns (ok, budget_refund); ok is
-        False when ``req`` itself had to be preempted."""
+        """Allocate slots for ``req``, preempting running requests (picked
+        by ``cfg.victim_selection``) until it fits.  Returns
+        (ok, budget_refund); ok is False when ``req`` could not be
+        scheduled this step — either preempted itself, or (async copy
+        engine) parked until in-flight frees land.
+
+        Under the copy engine a swap victim's blocks free only when its
+        copy-out epoch retires, so evicting it cannot satisfy THIS
+        step's allocation.  Once enough deferred frees are queued to
+        cover the need, stop evicting: ``req`` stays running (state
+        untouched, no plan entry) and retries next step when the memory
+        arrives — evicting more victims now would just cascade the
+        whole batch out."""
         refund = 0
         while not self._alloc_slots(req, n_tokens):
-            victim = self.running[-1]
+            if self.copies is not None:
+                need = self._blocks_needed(req, n_tokens)
+                # every in-flight swap-out counts — this call's victims
+                # (submitted by _preempt_swap) AND earlier steps' not yet
+                # retired (async lookahead schedules step N+1 before
+                # complete_step(N) retires; without the global view a
+                # request parked at N would see its victims' blocks as
+                # "not coming" and evict a fresh set every step)
+                if self.copies.in_flight_blocks_of(SWAP_OUT) >= need:
+                    # parked on in-flight frees: claim them next step,
+                    # ahead of any swap-in (see schedule() step 0)
+                    self._defer_pending = True
+                    return False, refund
+            victim = self._pick_victim(req)
             refund += self._preempt(victim, plan)
             if victim is req:
                 return False, refund
@@ -406,6 +626,24 @@ class Scheduler:
         req.state = RequestState.FINISHED
         self._release_blocks(req)
         self.running.remove(req)
+
+    def _finish_restore(self, req: Request) -> None:
+        """Completion action of a restore transfer (async copy engine):
+        the pages have landed, so the host tier drops its copy and the
+        request re-enters the batch — unless the client timed out while
+        the copy was in flight, in which case the target blocks are
+        freed and the workers get a state-drop notice."""
+        self.blocks.swap_space.release(req.req_id)
+        if req.state == RequestState.TIMED_OUT:
+            self._release_blocks(req)
+            self._dropped_while_swapped.append(req.req_id)
+            return
+        self.restoring.remove(req)
+        req.state = (RequestState.PREFILLING if req.prefill_remaining > 0
+                     else RequestState.DECODING)
+        # FRONT of running, same anti-thrash placement as the serialized
+        # re-admission path
+        self.running.insert(0, req)
 
     def expire(self, now: float, timeout: float) -> List[Request]:
         """Abort requests whose client timed out (no first token within
@@ -434,6 +672,14 @@ class Scheduler:
                 # drop it on the next broadcast plan
                 self._dropped_while_swapped.append(req.req_id)
                 dead.append(req)
+        for req in list(self.restoring):
+            if not req.t_first_token and now - req.t_arrival > timeout:
+                # the restore copy is still in flight: only mark the abort
+                # here — its blocks stay IN_FLIGHT until the transfer's
+                # epoch retires and ``_finish_restore`` reclaims them
+                req.state = RequestState.TIMED_OUT
+                self.restoring.remove(req)
+                dead.append(req)
         return dead
 
     # -- the per-step decision -------------------------------------------------
@@ -450,11 +696,36 @@ class Scheduler:
         # bandwidth — it consumes device blocks but no token budget.  A
         # restored request rejoins ``running`` in its pre-swap state
         # (derived from prefill progress) and is scheduled below like any
-        # other running request, after its restore directives.  Re-admission
-        # never preempts: if the table doesn't fit, it waits.
-        while self.swapped and len(self.running) < cfg.max_num_seqs:
+        # other running request, after its restore directives.  Under the
+        # async copy engine it instead parks in RESTORING until the
+        # transfer's epoch retires (``_finish_restore``): its device
+        # pages are still being filled, so nothing may read them this
+        # step.  Re-admission never preempts: if the table doesn't fit,
+        # it waits.
+        # ... unless a compute allocation was parked last step waiting on
+        # deferred frees (async mode): it claims the landed blocks first,
+        # or the swapped queue would eat every freed block the moment it
+        # lands and the starving decoder would evict victims forever —
+        # all swap round trips, no token progress
+        readmit = not self._defer_pending
+        self._defer_pending = False
+        while (readmit and self.swapped
+               and len(self.running) + len(self.restoring)
+               < cfg.max_num_seqs):
             req = self.swapped[0]
-            pairs = self.blocks.swap_in(req.req_id)
+            if (self.copies is not None
+                    and self.blocks.free_blocks
+                    < len(req.host_block_table) + 1):
+                # anti-thrash headroom (async only): the restored request
+                # computes one step AFTER its restore epoch — if the
+                # restore consumes the last free block, whoever needs a
+                # block meanwhile evicts someone (often the restoree)
+                # before that compute ever runs, and restore/evict cycles
+                # forever.  The serialized path needs no headroom: its
+                # restoree computes in the same plan.
+                break
+            pairs = self.blocks.swap_in(req.req_id,
+                                        defer_release=self.copies is not None)
             if pairs is None:
                 break                  # device pool full; retry next step
             self.swapped.pop(0)
@@ -462,12 +733,19 @@ class Scheduler:
             req.host_block_table = []
             req.block_table = [dev for _, dev in pairs]
             req.kv_allocated = len(pairs) * cfg.block_size
-            req.state = (RequestState.PREFILLING if req.prefill_remaining > 0
-                         else RequestState.DECODING)
-            if req.state == RequestState.DECODING:
+            if req.prefill_remaining == 0:
                 # phase tag: this restore refills decode-tier pages, even
                 # if the decode cap rotates the request out of this plan
                 plan.decode_tier_swaps.append(req.req_id)
+            if self.copies is not None:
+                req.state = RequestState.RESTORING
+                self.restoring.append(req)
+                self.copies.submit(
+                    plan.step_id, RESTORE, req.req_id, len(pairs),
+                    on_complete=(lambda r=req: self._finish_restore(r)))
+                continue
+            req.state = (RequestState.PREFILLING if req.prefill_remaining > 0
+                         else RequestState.DECODING)
             # to the FRONT of running: preemption victims are picked from
             # the tail (most recently admitted), and a restored request is
             # among the oldest admissions — parking it at the tail would
@@ -524,7 +802,10 @@ class Scheduler:
         # blocking.  Admission itself never preempts running work.
         bs = cfg.block_size
         while (self.waiting and budget > 0
-               and len(self.running) < cfg.max_num_seqs):
+               and len(self.running) + len(self.restoring)
+               < cfg.max_num_seqs):          # RESTORING requests re-enter
+                                             # running at epoch retire —
+                                             # they hold batch slots too
             req = self.waiting[0]
             # add_request() rejects requests that can never fit, so the head
             # of the queue always fits the pool when it runs alone
@@ -554,18 +835,24 @@ class Scheduler:
                 plan.prefill_done.append(req.req_id)
 
         if (not plan.prefill and not plan.decode
-                and not plan.swap_outs and not plan.restores):
+                and not plan.swap_outs and not plan.restores
+                and not self._dropped_while_swapped):
             self.step_id -= 1
             return None
 
-        # deferred state-drop notices (aborted while swapped) ride the
-        # first plan that actually ships — kept queued until one does
+        # deferred state-drop notices (aborted while swapped or while a
+        # restore was in flight) ride the first plan that ships — and
+        # force a notice-only plan when nothing else is left, or the
+        # workers would pin the dead state forever
         if self._dropped_while_swapped:
             plan.preempted.extend(self._dropped_while_swapped)
             self._dropped_while_swapped.clear()
 
         # 4. attach the per-request block tables + input ids the workers
-        # need — the part of the payload that grows with the batch.
+        # need — the part of the payload that grows with the batch.  Under
+        # delta encoding only the appended tail is serialized: tables are
+        # append-only between resets and every reset path clears
+        # ``_sent_blocks``, so the readers' known prefix is always valid.
         by_id = {r.req_id: r for r in self.running}
         for rid, start, n in plan.prefill:
             req = by_id[rid]
@@ -577,6 +864,12 @@ class Scheduler:
             last = (req.generated[-1] if req.generated
                     else (req.prompt_tokens[-1] if req.prompt_tokens else 0))
             plan.new_tokens[rid] = [last]
+        if self.cfg.delta_block_tables:
+            for rid, table in plan.block_tables.items():
+                base = self._sent_blocks.get(rid, 0)
+                if base:
+                    plan.table_base[rid] = base
+                self._sent_blocks[rid] = len(table)
         return plan
 
     def complete_step(self, plan: StepPlan, now: float,
@@ -585,6 +878,11 @@ class Scheduler:
 
         ``result`` is an optional ``repro.backend.StepResult`` whose sampled
         tokens are appended instead of the emulated placeholder 0."""
+        if self.copies is not None:
+            # this step's execution finished, so every transfer it (or any
+            # earlier step) submitted has landed: run the deferred release
+            # actions and re-admit requests whose restore epoch completed
+            self.copies.retire(plan.step_id)
         done = []
         tokens = result.tokens if result is not None else {}
         by_id = {r.req_id: r for r in self.running}
@@ -631,4 +929,5 @@ class Scheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running or self.swapped)
+        return bool(self.waiting or self.running or self.swapped
+                    or self.restoring or self._dropped_while_swapped)

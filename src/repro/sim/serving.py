@@ -96,7 +96,9 @@ class ServingModel:
                 EmulatedBackend(params.decode_device, sleep=False),
                 t_handoff_block=(params.t_handoff_block
                                  if params.t_handoff_block > 0
-                                 else params.device.t_swap_block))
+                                 else params.device.t_swap_block),
+                copy_streams=params.device.copy_streams,
+                t_submit_per_copy=params.device.t_submit_per_copy)
         else:
             self.backend = EmulatedBackend(params.device, sleep=False)
         self.requests: List[Request] = []
@@ -304,6 +306,9 @@ def victim_stats(res: WorkloadResult, timeout: float) -> dict:
         "first_victim_ttft": round(tt[0], 2) if tt and tt[0] else None,
         "mean_completed_ttft": (round(sum(done) / len(done), 2)
                                 if done else None),
+        # the victim-selection knob's target metric: the worst completed
+        # victim (the tail queues behind every mispriced eviction)
+        "max_completed_ttft": round(max(done), 2) if done else None,
         "timeouts": sum(1 for t in tt if t is None or t >= timeout),
     }
 
@@ -335,6 +340,29 @@ def llama8b_tp4_params(n_cores: int, tp: int = 4,
                                   swap_capacity_tokens=kv_capacity_tokens,
                                   **device.preemption_calibration()),
     )
+
+
+def with_async_copies(params: ServingParams, *, copy_streams: int,
+                      t_submit_per_copy: float = 5e-6) -> ServingParams:
+    """Async-copy-engine variant of ``params`` (docs/copy_engine.md):
+    swap/restore (and hybrid handoff) transfers drain on ``copy_streams``
+    DMA-style streams concurrently with compute, leaving only the CPU
+    submission cost (``t_submit_per_copy`` per block descriptor — the
+    CPU-starvation knob benchmarks/copy_overlap.py sweeps) plus any
+    un-hidden drain time in the step, and the scheduler runs the
+    matching IN_FLIGHT epoch bookkeeping.  ``copy_streams=0`` is the
+    serialized baseline, ``params`` itself."""
+    device = dataclasses.replace(params.device, copy_streams=copy_streams,
+                                 t_submit_per_copy=t_submit_per_copy)
+    sched = dataclasses.replace(params.scheduler,
+                                **device.copy_calibration())
+    decode_device = params.decode_device
+    if decode_device is not None:
+        decode_device = dataclasses.replace(
+            decode_device, copy_streams=copy_streams,
+            t_submit_per_copy=t_submit_per_copy)
+    return dataclasses.replace(params, device=device, scheduler=sched,
+                               decode_device=decode_device)
 
 
 def with_hybrid_decode(params: ServingParams, *,

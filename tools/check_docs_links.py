@@ -1,7 +1,9 @@
 #!/usr/bin/env python3
 """Fail on broken intra-repo links and stale code references in the docs.
 
-Three checks over README.md and docs/*.md:
+Three checks over README.md, ROADMAP.md, and docs/*.md (the ROADMAP
+names modules, benchmarks, and attributes when it marks items done —
+those rot exactly like doc references):
 
 1. **Markdown links** — every inline link ``[text](target)`` whose target
    is not external (http/https/mailto) or a pure in-page anchor must
@@ -43,7 +45,7 @@ MODULE_ROOTS = {"repro": REPO / "src" / "repro", "benchmarks": REPO / "benchmark
 
 
 def md_files() -> list[Path]:
-    files = [REPO / "README.md"]
+    files = [REPO / "README.md", REPO / "ROADMAP.md"]
     files += sorted((REPO / "docs").glob("*.md"))
     return [f for f in files if f.exists()]
 
