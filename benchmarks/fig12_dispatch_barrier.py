@@ -6,9 +6,16 @@ each worker "dispatches" (fixed CPU burn) and marks a CompletionBoard; the
 engine's barrier wait measures the group stall.  As N grows on one core,
 dispatches serialize and the barrier wait grows ~linearly — the straggler
 amplification of §V-A.  A DES counterpart sweeps cores.
+
+The ``multi_step`` sweep measures the same floor under k-step macro-plans
+(docs/multi_step.md): one broadcast/dispatch/barrier round trip carries k
+decode tokens, so the per-TOKEN control cost divides by k — the floor
+collapse the tentpole optimization banks on (``--multi-step`` runs just
+this sweep).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import multiprocessing as mp
 import statistics as st
@@ -82,6 +89,53 @@ def real_barrier_scaling(n_steps: int = 30) -> list:
     return rows
 
 
+def multi_step_scaling(tp: int = 4, total_tokens: int = 96) -> list:
+    """REAL k-sweep: same tp, same per-round-trip control burn, but each
+    broadcast carries a k-step macro-plan, so the burn amortizes over k
+    decode tokens.  Total tokens held fixed across k; the per-token
+    control cost should divide by ~k (the ``collapse`` column)."""
+    rows = []
+    base_ms = None
+    for k in (1, 2, 4, 8):
+        n_plans = total_tokens // k
+        ring = ShmBroadcastQueue.create(n_readers=tp, n_slots=4,
+                                        slot_bytes=2048)
+        board = CompletionBoard.create(tp)
+        procs = [_CTX.Process(target=_worker,
+                              args=(ring.name, board.name, i, tp, n_plans),
+                              daemon=True) for i in range(tp)]
+        try:
+            for p in procs:
+                p.start()
+            w = ring.writer()
+            t0 = time.perf_counter()
+            sid = 0
+            for _ in range(n_plans):
+                sid += k       # macro-plans own k consecutive step ids
+                plan = StepPlan(sid, [], [1], [], num_steps=k,
+                                decode_steps={1: k})
+                w.enqueue(plan.encode(), timeout=120.0)
+                board.wait_all(sid, timeout=120.0, yield_every=256)
+            wall = time.perf_counter() - t0
+        finally:
+            for p in procs:
+                p.join(timeout=10.0)
+                if p.is_alive():
+                    p.terminate()
+            ring.close()
+            board.close()
+        per_tok_ms = wall / (n_plans * k) * 1e3
+        if base_ms is None:
+            base_ms = per_tok_ms
+        rows.append({
+            "k": k, "tp": tp, "plans": n_plans,
+            "tokens": n_plans * k,
+            "per_token_control_ms": round(per_tok_ms, 3),
+            "collapse_vs_k1": round(base_ms / per_tok_ms, 2),
+        })
+    return rows
+
+
 def sim_barrier_scaling() -> list:
     """DES counterpart: dispatch serialization vs cores."""
     from repro.sim.core import Sim
@@ -110,7 +164,8 @@ def sim_barrier_scaling() -> list:
 
 def run(write: bool = True) -> dict:
     out = {"real_1core": real_barrier_scaling(),
-           "sim_cores_sweep": sim_barrier_scaling()}
+           "sim_cores_sweep": sim_barrier_scaling(),
+           "multi_step_1core": multi_step_scaling()}
     if write:
         ARTIFACTS.mkdir(parents=True, exist_ok=True)
         (ARTIFACTS / "fig12_dispatch_barrier.json").write_text(
@@ -118,7 +173,22 @@ def run(write: bool = True) -> dict:
     return out
 
 
+def _print_multi_step(rows: list) -> None:
+    print("multi-step(1 core): k,tp,per_token_control_ms,collapse_vs_k1")
+    for r in rows:
+        print(f"{r['k']},{r['tp']},{r['per_token_control_ms']},"
+              f"{r['collapse_vs_k1']}")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-step", action="store_true",
+                    help="run only the k-step macro-plan sweep "
+                         "(docs/multi_step.md)")
+    args, _ = ap.parse_known_args()   # tolerate the aggregator's --fast
+    if args.multi_step:
+        _print_multi_step(multi_step_scaling())
+        return
     out = run()
     print("real(1 core): tp,barrier_p50_ms,amplification_vs_1rank_ideal")
     for r in out["real_1core"]:
@@ -126,6 +196,7 @@ def main() -> None:
     print("sim: cores,tp,group_stall_ms")
     for r in out["sim_cores_sweep"]:
         print(f"{r['cores']},{r['tp']},{r['group_stall_ms']}")
+    _print_multi_step(out["multi_step_1core"])
 
 
 if __name__ == "__main__":

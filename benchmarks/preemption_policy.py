@@ -27,9 +27,14 @@ The sweep crosses three regime knobs:
 Measured shape: recompute wins whenever the cache resumes it or the
 transfer is PCIe-priced; swap wins bursts on coupled parts; under
 sustained overload recompute wins everywhere.  Adaptive tracks the
-winner in every regime except sustained+coupled+no-cache, where its
-myopic per-victim pricing cannot see overload depth (ROADMAP names the
-feedback signal as the follow-on).
+winner everywhere except a residual probe cost in
+sustained+coupled+no-cache: per-victim pricing cannot see overload
+depth up front, so it swaps until the observed re-eviction rate trips
+the overload fallback (``SchedulerConfig.re_evict_threshold``,
+docs/preemption.md) and it converges on recompute — the fallback cuts
+that regime's swap churn ~8x (847 -> 109 round trips) and its victim
+tail from 65.5 s to 39.5 s, leaving +1.2 s of probe cost vs the
+recompute oracle (down from +3.6 s with the fallback disabled).
 Reports per-policy victim TTFT / timeout counts plus deltas vs the
 recompute baseline of the same regime, and the eviction traffic
 (preemptions, swaps) that explains them.

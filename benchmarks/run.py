@@ -69,6 +69,11 @@ def main() -> None:
              "analogue)")
     fusion_ablation.main()
 
+    from benchmarks import multi_step
+    _section("beyond-paper: multi-step dispatch (k-step macro-plans, "
+             "control-floor collapse + backend conformance)")
+    multi_step.main(fast=fast)
+
     from benchmarks import hybrid_split
     _section("beyond-paper: split-phase CPU-decode offload crossover "
              "(hybrid vs unified)")

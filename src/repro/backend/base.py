@@ -45,7 +45,17 @@ drives each registered backend through it):
   * ``step_cost(plan)`` is pure (no device work, no side effects):
     virtual-time consumers (the DES) charge it instead of executing;
   * ``execute`` returns a ``StepResult`` whose ``tokens`` cover every
-    decode id and every request whose prefill completed this step.
+    decode id and every request whose prefill completed this step;
+  * a macro-plan (``plan.num_steps > 1``, docs/multi_step.md) runs up to
+    ``num_steps`` decode iterations device-side, feeding each sampled
+    token back as the next step's input.  Row ``rid`` runs at most
+    ``plan.decode_steps[rid]`` iterations and may exit early once it
+    samples ``plan.eos_tokens[rid]``.  The result's ``token_steps[s]``
+    maps rid -> token for every row that emitted at inner step ``s``
+    (emission is prefix-contiguous: a row emits steps 0..j, then
+    nothing); ``tokens`` still carries each row's LAST emitted token.
+    Macro-plans are decode-steady by construction — the scheduler never
+    attaches prefill, swap directives, or drop notices to one.
 
 Conformance expectation: driving one workload through the scheduler with
 any backend yields the same completion order and per-request token
@@ -119,6 +129,11 @@ class StepResult:
     tokens: Dict[int, int] = dataclasses.field(default_factory=dict)
     # req_id -> sampled token (decode reqs + requests finishing prefill)
     wall_s: float = 0.0
+    # macro-plan per-step token stream (docs/multi_step.md): entry s maps
+    # req_id -> token sampled at inner step s; a row that early-exited
+    # (EOS / budget) is simply absent from later entries.  None for
+    # single-step plans.
+    token_steps: Optional[List[Dict[int, int]]] = None
 
 
 @runtime_checkable

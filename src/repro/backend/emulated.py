@@ -42,4 +42,19 @@ class EmulatedBackend:
         tokens = {rid: 0 for rid in plan.decode}
         for rid, _, _ in plan.prefill:
             tokens[rid] = 0
-        return StepResult(step_id=plan.step_id, tokens=tokens, wall_s=t)
+        token_steps = None
+        if plan.num_steps > 1:
+            # per-step placeholder stream, honoring per-row budgets and
+            # EOS (token 0 may BE a row's EOS) so the scheduler's macro
+            # accounting sees the same early exits a physical backend
+            # would report
+            token_steps = []
+            for s in range(plan.num_steps):
+                row = {rid: 0 for rid in plan.decode
+                       if s < plan.decode_steps.get(rid, plan.num_steps)
+                       and not (s > 0 and plan.eos_tokens.get(rid) == 0)}
+                if not row:
+                    break
+                token_steps.append(row)
+        return StepResult(step_id=plan.step_id, tokens=tokens, wall_s=t,
+                          token_steps=token_steps)

@@ -148,6 +148,12 @@ class HybridBackend:
                 dec.table_base[rid] = plan.table_base[rid]
             if rid in plan.new_tokens:
                 dec.new_tokens[rid] = plan.new_tokens[rid]
+        if plan.num_steps > 1:
+            # macro-plans are decode-steady by scheduler construction:
+            # the whole k-step inner loop belongs to the decode tier
+            dec.num_steps = plan.num_steps
+            dec.decode_steps = dict(plan.decode_steps)
+            dec.eos_tokens = dict(plan.eos_tokens)
         for rid, pairs in plan.swap_outs.items():
             target = pre if self._tier_of(plan, rid) == PREFILL else dec
             target.swap_outs[rid] = pairs
@@ -298,7 +304,9 @@ class HybridBackend:
             t_submit_per_copy=self.t_submit_per_copy)
         if sleepers:
             time.sleep(wall)       # the concurrent-tier wall, charged once
-        return StepResult(step_id=plan.step_id, tokens=tokens, wall_s=wall)
+        return StepResult(step_id=plan.step_id, tokens=tokens, wall_s=wall,
+                          token_steps=(res_dec.token_steps
+                                       if res_dec is not None else None))
 
     def release(self, req_id: int) -> None:
         """Forget a finished request on both tiers."""

@@ -18,7 +18,7 @@ greedy argmax, deterministic given the seed, so the conformance contract
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -30,6 +30,7 @@ class JaxBackend(PagedSurrogateBackend):
     def __init__(self, **kwargs):
         super().__init__(**kwargs)
         self._attend_cache: Dict = {}
+        self._scan_cache: Dict = {}
 
     def _attend(self, q: np.ndarray, tables: np.ndarray,
                 seq_lens: np.ndarray) -> np.ndarray:
@@ -81,3 +82,118 @@ class JaxBackend(PagedSurrogateBackend):
             jnp.asarray(qp), jnp.asarray(kc), jnp.asarray(vc),
             jnp.asarray(bt), jnp.asarray(sl), jnp.asarray(self._wo))
         return np.asarray(logits)[:rows]
+
+    # -- fused multi-step decode (docs/multi_step.md) -------------------
+
+    def _decode_multi(self, rids: List[int], tables: Dict[int, List[int]],
+                      start: Dict[int, int], first: Dict[int, int],
+                      budgets: Dict[int, int], eos: Dict[int, Optional[int]],
+                      k: int) -> List[Dict[int, int]]:
+        """The k-step decode loop as ONE jitted ``lax.scan``: each inner
+        iteration embeds the carried token, projects and writes K/V into
+        the (functional) compact page pool, runs the paged pallas kernel,
+        samples greedily, and feeds the sample straight back — no host
+        round trip between the k steps, the device-side analog of a
+        captured CUDA graph.  Rows past their budget or EOS keep running
+        masked (a scan has static trip count): their writes are
+        redirected to a scratch page and their emissions dropped, which
+        reproduces exactly the reference loop's prefix-contiguous
+        stream.  The compact pool is scattered back to the host pages
+        once, at the end — safe because a macro-plan's rows only append
+        to refcount-exclusive tail blocks and never mutate shared prefix
+        pages."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.paged_decode_attention import paged_decode_attention
+
+        rows = len(rids)
+        nb_max = max(max(len(tables[rid]) for rid in rids), 1)
+        tb = np.full((rows, nb_max), -1, np.int32)
+        for i, rid in enumerate(rids):
+            tb[i, :len(tables[rid])] = tables[rid]
+        used = np.unique(tb[tb >= 0])
+        remap = np.full(self.num_blocks, -1, np.int32)
+        remap[used] = np.arange(len(used), dtype=np.int32)
+        compact = np.where(tb >= 0, remap[np.clip(tb, 0, None)], -1)
+
+        rows_p = _pow2_at_least(rows, 2)
+        nb_p = _pow2_at_least(nb_max, 2)
+        # one scratch page past the gathered set: masked rows write there
+        pool_p = _pow2_at_least(len(used) + 1, 2)
+        scratch = len(used)
+
+        bt = np.full((rows_p, nb_p), -1, np.int32)
+        bt[:rows, :nb_max] = compact
+        sl0 = np.zeros((rows_p,), np.int32)
+        sl0[:rows] = [start[rid] for rid in rids]
+        tok0 = np.zeros((rows_p,), np.int32)
+        tok0[:rows] = [first[rid] for rid in rids]
+        bud = np.zeros((rows_p,), np.int32)   # padded rows: budget 0
+        bud[:rows] = [budgets[rid] for rid in rids]
+        eos_v = np.full((rows_p,), -1, np.int32)   # -1 = no EOS (argmax >= 0)
+        eos_v[:rows] = [-1 if eos[rid] is None else eos[rid] for rid in rids]
+        kc = np.zeros((self.n_kv_heads, pool_p, self.block_size,
+                       self.head_dim), np.float32)
+        vc = np.zeros_like(kc)
+        kc[:, :len(used)] = self.k_pages[:, used]
+        vc[:, :len(used)] = self.v_pages[:, used]
+
+        key = (rows_p, nb_p, pool_p, k)
+        if key not in self._scan_cache:
+            bs = self.block_size
+            H, KV = self.n_heads, self.n_kv_heads
+            D, vocab = self.head_dim, self.vocab
+            interpret = self.interpret
+
+            @jax.jit
+            def run(kc, vc, bt, sl0, tok0, bud, eos_v,
+                    embed, wq, wk, wv, wo):
+                def body(carry, s):
+                    kc, vc, tok, alive = carry
+                    emit = alive & (s < bud)
+                    e = embed[tok % vocab]                    # [rows_p, E]
+                    pos = sl0 + s          # valid while emitting: emission
+                                           # is prefix-contiguous from s=0
+                    kn = (e @ wk).reshape(-1, KV, D)
+                    vn = (e @ wv).reshape(-1, KV, D)
+                    page = jnp.take_along_axis(
+                        bt, (pos // bs)[:, None], axis=1)[:, 0]
+                    page = jnp.where(emit, page, scratch)
+                    slot = pos % bs
+                    kc = kc.at[:, page, slot].set(jnp.swapaxes(kn, 0, 1))
+                    vc = vc.at[:, page, slot].set(jnp.swapaxes(vn, 0, 1))
+                    q = (e @ wq).reshape(-1, H, D)
+                    sl = jnp.where(emit, pos + 1, 0)
+                    out = paged_decode_attention(q, kc, vc, bt, sl,
+                                                 interpret=interpret)
+                    logits = out.reshape(out.shape[0], -1) @ wo
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    alive = emit & (nxt != eos_v)
+                    return (kc, vc, nxt, alive), (nxt, emit)
+
+                init = (kc, vc, tok0, jnp.ones_like(tok0, dtype=bool))
+                (kc, vc, _, _), (toks, emits) = jax.lax.scan(
+                    body, init, jnp.arange(k))
+                return kc, vc, toks, emits
+
+            self._scan_cache[key] = run
+
+        kc_o, vc_o, toks, emits = self._scan_cache[key](
+            jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(bt),
+            jnp.asarray(sl0), jnp.asarray(tok0), jnp.asarray(bud),
+            jnp.asarray(eos_v), jnp.asarray(self._embed),
+            jnp.asarray(self._wq), jnp.asarray(self._wk),
+            jnp.asarray(self._wv), jnp.asarray(self._wo))
+        self.k_pages[:, used] = np.asarray(kc_o)[:, :len(used)]
+        self.v_pages[:, used] = np.asarray(vc_o)[:, :len(used)]
+        toks = np.asarray(toks)
+        emits = np.asarray(emits)
+        steps: List[Dict[int, int]] = []
+        for s in range(k):
+            row = {rid: int(toks[s, i])
+                   for i, rid in enumerate(rids) if emits[s, i]}
+            if not row:
+                break
+            steps.append(row)
+        return steps

@@ -191,6 +191,14 @@ class PagedSurrogateBackend:
             else:
                 self._copy_back(pairs)
 
+        # multi-step macro-plan (docs/multi_step.md): run the k-iteration
+        # decode loop and return its per-step token stream.  Macro-plans
+        # are decode-steady by scheduler construction (no prefill, no
+        # swap directives), but deferred copies from the PREVIOUS epoch
+        # were just flushed above, as the contract requires.
+        if plan.num_steps > 1:
+            return self._execute_multi(plan, tables, t0)
+
         rows: List[tuple] = []                # (rid, q_token, seq_len, table)
         for rid, start, n in plan.prefill:
             table = tables.get(rid, [])
@@ -229,6 +237,76 @@ class PagedSurrogateBackend:
         self._last_wall = time.perf_counter() - t0
         return StepResult(step_id=plan.step_id, tokens=tokens,
                           wall_s=self._last_wall)
+
+    # -- multi-step macro-plans (docs/multi_step.md) --------------------
+
+    def _execute_multi(self, plan: StepPlan,
+                       tables: Dict[int, List[int]], t0: float) -> StepResult:
+        """Drive the k-step decode loop for a macro-plan and package its
+        per-step token stream.  ``_decode_multi`` is the execution seam
+        (host loop here; ``JaxBackend`` overrides it with a fused
+        ``lax.scan`` so sampled tokens feed back device-side)."""
+        rids = list(plan.decode)
+        tbls = {rid: tables.get(rid, []) for rid in rids}
+        start = {rid: self._seq_lens.get(rid, 0) for rid in rids}
+        first = {rid: int(plan.new_tokens.get(rid, [0])[0]) for rid in rids}
+        budgets = {rid: plan.decode_steps.get(rid, plan.num_steps)
+                   for rid in rids}
+        eos = {rid: plan.eos_tokens.get(rid) for rid in rids}
+        steps = self._decode_multi(rids, tbls, start, first, budgets, eos,
+                                   plan.num_steps)
+        tokens: Dict[int, int] = {}
+        for row in steps:
+            tokens.update(row)
+        for rid in rids:
+            emitted = sum(1 for row in steps if rid in row)
+            self._track(rid, start[rid] + emitted)
+        self._last_wall = time.perf_counter() - t0
+        return StepResult(step_id=plan.step_id, tokens=tokens,
+                          wall_s=self._last_wall, token_steps=steps)
+
+    def _decode_multi(self, rids: List[int], tables: Dict[int, List[int]],
+                      start: Dict[int, int], first: Dict[int, int],
+                      budgets: Dict[int, int], eos: Dict[int, Optional[int]],
+                      k: int) -> List[Dict[int, int]]:
+        """Reference k-step decode loop: each inner step writes the
+        current token's K/V at the row's next position, attends, samples
+        greedily, and feeds the sample back as the next input.  A row
+        stops after its budget or once it samples its EOS — emission is
+        prefix-contiguous, matching the Backend contract.  Runs the SAME
+        per-row math as k=1 ``execute`` (rows are independent in
+        ``_attend``), so the stream is bit-identical to k single steps."""
+        cur = dict(first)
+        pos = dict(start)
+        alive = {rid: True for rid in rids}
+        steps: List[Dict[int, int]] = []
+        for s in range(k):
+            act = [rid for rid in rids if alive[rid] and s < budgets[rid]]
+            if not act:
+                break
+            for rid in act:
+                self._write(tables[rid], pos[rid],
+                            np.asarray([cur[rid]], np.int64))
+                pos[rid] += 1
+            nb_max = max(len(tables[rid]) for rid in act)
+            q = np.zeros((len(act), self.n_heads, self.head_dim), np.float32)
+            bt = np.full((len(act), max(nb_max, 1)), -1, np.int32)
+            sl = np.zeros((len(act),), np.int32)
+            for i, rid in enumerate(act):
+                e = self._emb(np.asarray([cur[rid]]))[0]
+                q[i] = (e @ self._wq).reshape(self.n_heads, self.head_dim)
+                bt[i, :len(tables[rid])] = tables[rid]
+                sl[i] = pos[rid]
+            logits = self._attend(q, bt, sl)
+            row: Dict[int, int] = {}
+            for i, rid in enumerate(act):
+                tok = int(np.argmax(logits[i]))
+                row[rid] = tok
+                cur[rid] = tok
+                if eos[rid] is not None and tok == eos[rid]:
+                    alive[rid] = False
+            steps.append(row)
+        return steps
 
     def release(self, req_id: int) -> None:
         """Forget a finished request's bookkeeping (pages are owned by the

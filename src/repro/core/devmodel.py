@@ -51,20 +51,30 @@ class DeviceModel:
 
     def step_time(self, plan: StepPlan) -> float:
         pre = sum(l for _, _, l in plan.prefill)
+        # multi-step macro-plan (docs/multi_step.md): the dispatch /
+        # collective floor and the table upload are paid ONCE per
+        # broadcast — the CUDA-Graphs mechanism — while decode compute
+        # scales with the total inner iterations actually budgeted
+        n_decode = len(plan.decode)
+        if plan.num_steps > 1:
+            n_decode = sum(plan.decode_steps.get(rid, plan.num_steps)
+                           for rid in plan.decode)
         compute = (self.t_fixed + pre * self.t_prefill_tok
-                   + len(plan.decode) * self.t_decode_seq
+                   + n_decode * self.t_decode_seq
                    + plan.n_new_table_entries * self.t_block_entry)
         t = overlapped_seconds(
             compute, plan.n_swapped_blocks,
             copy_streams=self.copy_streams, t_copy_block=self.t_swap_block,
             t_submit_per_copy=self.t_submit_per_copy)
-        return min(t, self.max_step)
+        return min(t, self.max_step * plan.num_steps)
 
     def preemption_calibration(self) -> dict:
         """SchedulerConfig kwargs so the adaptive preemption policy prices
-        swap round-trips vs recompute with THIS device's coefficients."""
+        swap round-trips vs recompute with THIS device's coefficients
+        (and the victim time-to-release term with its decode speed)."""
         return {"t_swap_block": self.t_swap_block,
-                "t_recompute_token": self.t_prefill_tok}
+                "t_recompute_token": self.t_prefill_tok,
+                "t_release_token": self.t_decode_seq}
 
     def copy_calibration(self) -> dict:
         """SchedulerConfig kwargs enabling the scheduler's in-flight

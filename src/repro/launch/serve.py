@@ -78,6 +78,11 @@ def main() -> None:
                     help="CPU seconds to submit one copy descriptor — the "
                          "CPU-starvation knob: large values erode the "
                          "overlap back to the serialized cost")
+    ap.add_argument("--multi-step", type=int, default=1,
+                    help="multi-step dispatch (docs/multi_step.md): "
+                         "decode-steady batches run up to k decode "
+                         "iterations per broadcast/barrier round trip — "
+                         "the CUDA-Graphs analog; 1 = per-step dispatch")
     ap.add_argument("--victim-selection", default="lifo",
                     choices=("lifo", "cheapest"),
                     help="preemption victim choice: most recently admitted "
@@ -127,6 +132,7 @@ def main() -> None:
             max_decode_seqs=args.max_decode_seqs,
             victim_selection=args.victim_selection,
             delta_block_tables=not args.no_delta_tables,
+            max_steps_per_dispatch=args.multi_step,
             t_swap_block_decode=(
                 device.cpu_tier(
                     decode_slowdown=args.decode_slowdown).t_swap_block
@@ -148,7 +154,8 @@ def main() -> None:
           f"backend={backend_desc} async_sched={args.async_sched} "
           f"preemption={args.preemption_policy} "
           f"victims={args.victim_selection} "
-          f"copy_streams={args.copy_streams}")
+          f"copy_streams={args.copy_streams} "
+          f"multi_step={args.multi_step}")
     text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
 
     sys_ = ServingSystem(cfg).start()

@@ -30,6 +30,11 @@ class Request:
     max_new_tokens: int = 16
     req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     is_victim: bool = False        # attacker/victim experiment tag
+    # sampling this token ends generation early (None = run to
+    # max_new_tokens).  Multi-step macro-plans (docs/multi_step.md) ship
+    # it to the backends so a device-side k-step loop can stop feeding a
+    # finished sequence; the scheduler rolls back the unused reservation.
+    eos_token: Optional[int] = None
 
     # token state
     prompt_tokens: Optional[List[int]] = None

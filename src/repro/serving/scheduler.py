@@ -120,8 +120,40 @@ class SchedulerConfig:
     # per step (plus a resync-safe base count); workers reconstruct via
     # ``BlockTableTracker``.  False = every plan ships full tables.
     delta_block_tables: bool = True
+    # -- multi-step dispatch (docs/multi_step.md) -----------------------
+    # When the batch is decode-steady (no prefill, no queued admissions,
+    # no swap traffic in flight), emit a k-step macro-plan: workers run
+    # up to k decode iterations per broadcast/barrier round trip, the
+    # CUDA-Graphs analog that amortizes the per-step control-plane floor
+    # (paper §II-A③).  KV growth for all k steps is pre-reserved (k
+    # shrinks to what fits); per-request budgets are capped at the
+    # remaining decode length; EOS/max-len early exits roll the unused
+    # reservation back at completion.  1 = per-step dispatch (default).
+    max_steps_per_dispatch: int = 1
+    # -- victim selection: time-to-release term (docs/preemption.md) ----
+    # Modeled seconds of device decode per token the victim still owes
+    # before it would release its blocks anyway.  A victim near the end
+    # of its decode frees memory soon without help, so evicting it buys
+    # almost nothing: its remaining decode length is priced into
+    # ``_eviction_cost`` and "cheapest" prefers short-remaining victims.
+    # Wire from ``DeviceModel.preemption_calibration()`` (t_decode_seq);
+    # 0 disables the term.
+    t_release_token: float = 1e-4
+    # -- overload-aware adaptive preemption (docs/preemption.md) --------
+    # The adaptive policy falls back to recompute while the observed
+    # re-eviction rate (restored requests evicted again) exceeds this
+    # fraction: under sustained overload the swap tier cycles KV back
+    # and forth without retiring work, so the modeled per-victim win
+    # never materializes.  Counters decay, so swap is re-probed once
+    # pressure eases.  > 1 disables the feedback.
+    re_evict_threshold: float = 0.5
+    re_evict_min_samples: int = 4      # restores observed before acting
 
     def __post_init__(self):
+        if self.max_steps_per_dispatch < 1:
+            raise ValueError(
+                f"max_steps_per_dispatch={self.max_steps_per_dispatch} "
+                f"(want >= 1)")
         if self.preemption_policy not in PREEMPTION_POLICIES:
             raise ValueError(
                 f"preemption_policy={self.preemption_policy!r} "
@@ -130,6 +162,10 @@ class SchedulerConfig:
             raise ValueError(
                 f"victim_selection={self.victim_selection!r} "
                 f"(want one of {VICTIM_SELECTIONS})")
+
+    @property
+    def multi_step(self) -> bool:
+        return self.max_steps_per_dispatch > 1
 
     @property
     def num_kv_blocks(self) -> int:
@@ -182,8 +218,25 @@ class StepPlan:
     # holds FULL tables in-process; only ``encode`` ships the tail —
     # ``BlockTableTracker.expand`` rebuilds full tables after decode.
     table_base: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # -- multi-step macro-plan (docs/multi_step.md) ---------------------
+    # num_steps > 1: workers run up to ``num_steps`` decode iterations
+    # for this one broadcast.  ``decode_steps[rid]`` is the per-request
+    # inner-step budget (min(num_steps, remaining decode) — KV for all
+    # of it is pre-reserved in the shipped table); ``eos_tokens[rid]``
+    # lets the device loop stop feeding a sequence that sampled its EOS.
+    # Inner steps own consecutive step ids ``step_id .. last_step_id``,
+    # so copy-engine epochs stay sub-step-granular.  Macro-plans are
+    # decode-only by construction: never prefill/swap/notice work.
+    num_steps: int = 1
+    decode_steps: Dict[int, int] = dataclasses.field(default_factory=dict)
+    eos_tokens: Dict[int, int] = dataclasses.field(default_factory=dict)
     _raw: Optional[bytes] = dataclasses.field(
         default=None, repr=False, compare=False)
+
+    @property
+    def last_step_id(self) -> int:
+        """Step id of the final inner iteration (== step_id when k=1)."""
+        return self.step_id + self.num_steps - 1
 
     @property
     def n_tokens(self) -> int:
@@ -223,6 +276,11 @@ class StepPlan:
             }
             if self.table_base:
                 payload["table_base"] = self.table_base
+            if self.num_steps > 1:
+                payload["num_steps"] = self.num_steps
+                payload["decode_steps"] = self.decode_steps
+                if self.eos_tokens:
+                    payload["eos_tokens"] = self.eos_tokens
             self._raw = json.dumps(payload).encode()
         return self._raw
 
@@ -243,7 +301,13 @@ class StepPlan:
                    d.get("prefill_done", []),
                    d.get("decode_tier_swaps", []),
                    table_base={int(k): v
-                               for k, v in d.get("table_base", {}).items()})
+                               for k, v in d.get("table_base", {}).items()},
+                   num_steps=d.get("num_steps", 1),
+                   decode_steps={int(k): v
+                                 for k, v in d.get("decode_steps",
+                                                   {}).items()},
+                   eos_tokens={int(k): v
+                               for k, v in d.get("eos_tokens", {}).items()})
 
     @property
     def payload_bytes(self) -> int:
@@ -264,7 +328,10 @@ class StepPlan:
                 + 14 * self.n_swapped_blocks
                 + 12 * (len(self.swap_outs) + len(self.restores))
                 + 8 * len(self.prefill_done)
-                + 8 * len(self.decode_tier_swaps))
+                + 8 * len(self.decode_tier_swaps)
+                + (30 + 12 * len(self.decode_steps)
+                   + 12 * len(self.eos_tokens)
+                   if self.num_steps > 1 else 0))
 
 
 class BlockTableTracker:
@@ -335,6 +402,15 @@ class Scheduler:
         # round-robin cursor over decoders when max_decode_seqs caps the
         # decode tier (fairness: the cap must not starve the tail)
         self._decode_cursor = 0
+        # overload-aware adaptive preemption: observed restore count and
+        # how many victims were previously-restored requests (re-evicted
+        # — the swap round trip bought nothing).  Both halve every
+        # ``_OVERLOAD_WINDOW`` steps, so once the fallback quiets the
+        # swap tier the sample count decays below re_evict_min_samples
+        # and the policy re-probes swap.
+        self._n_restores = 0
+        self._n_re_evicts = 0
+        self._overload_tick = 0
         self.step_id = 0
         swap = None
         if cfg.num_swap_blocks > 0:
@@ -469,9 +545,24 @@ class Scheduler:
         swap_cost = 2 * len(victim.block_table) * t_swap
         if cfg.preemption_policy == "swap":
             return "swap", swap_cost
+        if self._swap_overloaded():
+            # sustained overload: restored requests keep getting
+            # re-evicted, so round trips are churn — fall back to
+            # recompute until the decayed counters clear
+            return "recompute", recompute_cost
         if swap_cost * cfg.swap_margin < recompute_cost:
             return "swap", swap_cost
         return "recompute", recompute_cost
+
+    _OVERLOAD_WINDOW = 128   # steps between counter halvings
+
+    def _swap_overloaded(self) -> bool:
+        """True while the observed re-eviction rate says the swap tier is
+        thrashing (adaptive policy only — see ``re_evict_threshold``)."""
+        if self._n_restores < self.cfg.re_evict_min_samples:
+            return False
+        return (self._n_re_evicts
+                > self.cfg.re_evict_threshold * self._n_restores)
 
     def _choose_preemption(self, victim: Request, plan: StepPlan) -> str:
         """Pick recompute vs swap for this victim (cfg.preemption_policy).
@@ -488,6 +579,11 @@ class Scheduler:
         """Evict ``victim`` under the configured policy; returns the token
         budget refund from work it already held in this plan."""
         refund = self._drop_from_plan(victim, plan)
+        if victim.n_swaps > 0:
+            # a previously-restored request evicted again: its swap
+            # round trip(s) retired no work — overload signal for the
+            # adaptive policy (``_swap_overloaded``)
+            self._n_re_evicts += 1
         if self._choose_preemption(victim, plan) == "swap":
             self._preempt_swap(victim, plan)
         else:
@@ -503,10 +599,18 @@ class Scheduler:
         a floor of one block's re-prefill (the un-registered partial
         tail plus re-admission work every eviction really pays), and
         aging — each prior eviction inflates the modeled cost, so
-        serial evictions rotate instead of starving one request."""
+        serial evictions rotate instead of starving one request.
+
+        Plus a time-to-release term (``t_release_token``): a victim
+        about to finish its decode would release its blocks on its own
+        in ``remaining * t_release_token`` seconds of device work, so
+        evicting it buys memory that was nearly free anyway — cheapest
+        selection prefers victims whose remaining decode is short."""
         _, cost = self._victim_price(victim)
         floor = self.cfg.block_size * self.cfg.t_recompute_token
-        return (max(cost, floor)
+        hold = ((victim.max_new_tokens - len(victim.generated))
+                * self.cfg.t_release_token)
+        return ((max(cost, floor) + hold)
                 * (1.0 + victim.n_preemptions + victim.n_swaps))
 
     def _pick_victim(self, req: Request) -> Request:
@@ -690,6 +794,13 @@ class Scheduler:
         cfg = self.cfg
         budget = cfg.max_tokens_per_step
         plan = StepPlan(self.step_id, [], [], [])
+        # decay the overload counters so adaptive re-probes swap once the
+        # fallback has quieted the tier (ratio alone never recovers: both
+        # halve, but the sample count drops below re_evict_min_samples)
+        self._overload_tick += 1
+        if self._overload_tick % self._OVERLOAD_WINDOW == 0:
+            self._n_restores //= 2
+            self._n_re_evicts //= 2
 
         # 0. re-admit swapped requests (FIFO) ahead of ALL fresh work: their
         # computed KV is sunk transfer cost, and restoring is pure copy
@@ -729,6 +840,7 @@ class Scheduler:
             if pairs is None:
                 break                  # device pool full; retry next step
             self.swapped.pop(0)
+            self._n_restores += 1      # overload feedback sample
             plan.restores[req.req_id] = pairs
             req.host_block_table = []
             req.block_table = [dev for _, dev in pairs]
@@ -848,6 +960,14 @@ class Scheduler:
             plan.preempted.extend(self._dropped_while_swapped)
             self._dropped_while_swapped.clear()
 
+        # 3b. multi-step dispatch (docs/multi_step.md): when this plan is
+        # pure steady decode — every running request decodes, nothing is
+        # queued, swapped, restoring, or in flight on the copy engine —
+        # extend it into a k-step macro-plan.  Must run before step 4 so
+        # the shipped block tables include the pre-reserved growth.
+        if cfg.max_steps_per_dispatch > 1 and self._macro_eligible(plan):
+            self._extend_macro(plan)
+
         # 4. attach the per-request block tables + input ids the workers
         # need — the part of the payload that grows with the batch.  Under
         # delta encoding only the appended tail is serialized: tables are
@@ -872,28 +992,128 @@ class Scheduler:
                 self._sent_blocks[rid] = len(table)
         return plan
 
+    # -- multi-step dispatch (docs/multi_step.md) -----------------------
+
+    def _macro_eligible(self, plan: StepPlan) -> bool:
+        """A plan may become a macro-plan only when the batch is
+        decode-steady: the whole running set decodes this step and no
+        state can change under the macro's feet — no prefill or swap
+        directives in the plan, no queued/swapped/restoring requests
+        that would want the next (k-1) scheduling decisions, no
+        in-flight copy-engine transfer whose epoch could need servicing
+        mid-macro, and no drop notices (which must ship exactly once on
+        a plan the workers inspect step by step)."""
+        if (plan.prefill or plan.swap_outs or plan.restores
+                or plan.preempted or not plan.decode):
+            return False
+        if self.waiting or self.swapped or self.restoring:
+            return False
+        if self._defer_pending:
+            return False
+        if self.copies is not None and self.copies.in_flight:
+            return False
+        if len(plan.decode) != len(self.running):
+            return False
+        return all(r.state == RequestState.DECODING for r in self.running)
+
+    def _extend_macro(self, plan: StepPlan) -> None:
+        """Turn a steady-decode plan into a k-step macro-plan: reserve KV
+        growth for up to ``max_steps_per_dispatch`` decode iterations per
+        request (shrinking k until the whole reservation fits — macro
+        extension NEVER preempts), record per-request inner-step budgets
+        capped at the remaining decode length, and advance ``step_id``
+        past the inner steps so copy-engine epochs stay sub-step ids."""
+        by_id = {r.req_id: r for r in self.running}
+        reqs = [by_id[rid] for rid in plan.decode]
+        rem = {r.req_id: max(r.max_new_tokens - len(r.generated), 1)
+               for r in reqs}
+        k = min(self.cfg.max_steps_per_dispatch, max(rem.values()))
+        while k > 1:
+            need = sum(self._blocks_needed(r, min(k, rem[r.req_id]) - 1)
+                       for r in reqs)
+            if need <= self.blocks.free_blocks:
+                break
+            k -= 1
+        if k <= 1:
+            return
+        for req in reqs:
+            extra = min(k, rem[req.req_id]) - 1   # step 1 already allocated
+            if extra > 0:
+                ok = self._alloc_slots(req, extra)
+                assert ok, "macro reservation was sized to fit"
+        plan.num_steps = k
+        plan.decode_steps = {r.req_id: min(k, rem[r.req_id]) for r in reqs}
+        plan.eos_tokens = {r.req_id: r.eos_token for r in reqs
+                           if r.eos_token is not None}
+        self.step_id += k - 1
+
     def complete_step(self, plan: StepPlan, now: float,
                       result=None) -> List[Request]:
         """Account one executed step; returns newly finished requests.
 
         ``result`` is an optional ``repro.backend.StepResult`` whose sampled
-        tokens are appended instead of the emulated placeholder 0."""
+        tokens are appended instead of the emulated placeholder 0.  For a
+        macro-plan (``num_steps > 1``) the result's per-step token stream
+        is consumed step by step, honoring EOS / max-len early exits; KV
+        reserved for inner steps that never ran is rolled back."""
         if self.copies is not None:
             # this step's execution finished, so every transfer it (or any
             # earlier step) submitted has landed: run the deferred release
-            # actions and re-admit requests whose restore epoch completed
-            self.copies.retire(plan.step_id)
+            # actions and re-admit requests whose restore epoch completed.
+            # Macro-plans retire through their LAST inner step id — the
+            # epochs in between belong to this plan's execution.
+            self.copies.retire(plan.last_step_id)
         done = []
         tokens = result.tokens if result is not None else {}
         by_id = {r.req_id: r for r in self.running}
+        if plan.num_steps > 1:
+            steps = (result.token_steps
+                     if result is not None
+                     and getattr(result, "token_steps", None) else None)
+            for rid in plan.decode:
+                req = by_id.get(rid)
+                if req is None:
+                    continue          # aborted mid-macro: blocks already
+                                      # reclaimed by expire()/abort paths
+                budget = plan.decode_steps.get(rid, plan.num_steps)
+                produced = 0
+                hit_eos = False
+                for s in range(budget):
+                    if steps is None:
+                        tok = 0       # cost-only execution placeholder
+                    elif s < len(steps) and rid in steps[s]:
+                        tok = steps[s][rid]
+                    else:
+                        break         # backend early-exited this row
+                    req.generated.append(tok)
+                    produced += 1
+                    if not req.t_first_token:
+                        req.t_first_token = now
+                    if len(req.generated) >= req.max_new_tokens:
+                        break
+                    if (req.eos_token is not None
+                            and tok == req.eos_token):
+                        hit_eos = True
+                        break
+                if produced < budget:
+                    self._rollback_unused(req, budget - produced)
+                if hit_eos or len(req.generated) >= req.max_new_tokens:
+                    req.t_done = now
+                    done.append(req)
+            for req in done:
+                self._finish(req)
+            return done
         for rid in plan.decode:
             req = by_id.get(rid)
             if req is None:
                 continue
-            req.generated.append(tokens.get(rid, 0))
+            tok = tokens.get(rid, 0)
+            req.generated.append(tok)
             if not req.t_first_token:
                 req.t_first_token = now
-            if len(req.generated) >= req.max_new_tokens:
+            if (len(req.generated) >= req.max_new_tokens
+                    or (req.eos_token is not None
+                        and tok == req.eos_token)):
                 req.t_done = now
                 done.append(req)
         # a request whose prefill finished this step produces its first token
@@ -903,14 +1123,35 @@ class Scheduler:
                 continue
             self._register_computed(req, start + n)
             if req.state == RequestState.DECODING and not req.t_first_token:
-                req.generated.append(tokens.get(rid, 0))
+                tok = tokens.get(rid, 0)
+                req.generated.append(tok)
                 req.t_first_token = now
-                if len(req.generated) >= req.max_new_tokens:
+                if (len(req.generated) >= req.max_new_tokens
+                        or (req.eos_token is not None
+                            and tok == req.eos_token)):
                     req.t_done = now
                     done.append(req)
         for req in done:
             self._finish(req)
         return done
+
+    def _rollback_unused(self, req: Request, n_tokens: int) -> None:
+        """Return KV slots a macro-plan reserved but never wrote (EOS or
+        max-len early exit).  Whole blocks freed by the shrink are
+        returned to the pool; ``_sent_blocks`` is clamped so the next
+        delta broadcast's known-prefix claim stays valid.  Only
+        refcount-exclusive decode-tail blocks can be freed here: the
+        reservation sits strictly above the prompt blocks the prefix
+        cache may share."""
+        req.kv_slots -= n_tokens
+        bs = self.cfg.block_size
+        keep = -(-req.kv_slots // bs)
+        while len(req.block_table) > keep:
+            self.blocks.free([req.block_table.pop()])
+        req.kv_allocated = len(req.block_table) * bs
+        sent = self._sent_blocks.get(req.req_id)
+        if sent is not None and sent > len(req.block_table):
+            self._sent_blocks[req.req_id] = len(req.block_table)
 
     def _register_computed(self, req: Request, n_computed: int) -> None:
         """Publish fully-computed prompt blocks to the prefix cache.  The

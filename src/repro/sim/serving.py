@@ -105,8 +105,12 @@ class ServingModel:
         self.tok_queue: List[Request] = []
         self.tok_ev = self.sim.event("tok-queue")
         self.engine_ev = self.sim.event("engine-input")
-        self.msg_ev: Dict[int, Event] = {}        # step -> broadcast publish
-        self.dispatched: Dict[int, int] = {}      # step -> ranks dispatched
+        # step events are keyed by plan ORDINAL (1st, 2nd, ... broadcast),
+        # not plan.step_id: a multi-step macro-plan advances step_id by k
+        # while remaining ONE broadcast/barrier round trip
+        self.msg_ev: Dict[int, Event] = {}        # ordinal -> msg published
+        self.dispatched: Dict[int, int] = {}      # ordinal -> ranks dispatched
+        self._plans: Dict[int, StepPlan] = {}     # ordinal -> plan
         self.all_disp_ev: Dict[int, Event] = {}
         self.done_ev: Dict[int, Event] = {}
         self.dequeue_waits: List[float] = []
@@ -210,9 +214,9 @@ class ServingModel:
             if plan is None:
                 yield ("wait", self.engine_ev)
                 continue
-            step = plan.step_id
             self.n_steps += 1
-            msg, done = self._get_step_events(step)
+            self._plans[self.n_steps] = plan
+            msg, done = self._get_step_events(self.n_steps)
             yield ("cpu", p.enqueue_cost
                    + plan.approx_payload_bytes() * p.serialize_cost_per_byte)
             self.sim.fire(msg)
@@ -228,14 +232,21 @@ class ServingModel:
 
     def _fusion_rounds(self, plan: Optional[StepPlan]) -> int:
         """Decode-only plans run ``decode_fusion`` tokens per dispatch
-        (models.decode_multi — the persistent-kernel analogue)."""
-        if plan is None or self.p.decode_fusion <= 1 or plan.prefill:
+        (models.decode_multi — the persistent-kernel analogue).  A
+        scheduler-emitted macro-plan already multi-steps with full KV
+        accounting (docs/multi_step.md), so the legacy knob must not
+        double-count it: one completion round, the plan itself carries
+        ``num_steps``."""
+        if plan is None or plan.num_steps > 1:
+            return 1
+        if self.p.decode_fusion <= 1 or plan.prefill:
             return 1
         return self.p.decode_fusion
 
     def _worker_proc(self, rank: int):
         p = self.p
-        step = 1
+        step = 1        # plan ordinal: one iteration per broadcast, even
+                        # when a macro-plan spans k scheduler step ids
         while not self._stopped:
             msg, done = self._get_step_events(step)
             t0 = self.sim.now
@@ -259,18 +270,6 @@ class ServingModel:
     # -- run ---------------------------------------------------------------------
 
     def run(self, horizon: float = 400.0) -> WorkloadResult:
-        # wrap schedule() to record plans for _plan_time
-        self._plans: Dict[int, StepPlan] = {}
-        orig_schedule = self.sched.schedule
-
-        def schedule_wrapper():
-            plan = orig_schedule()
-            if plan is not None:
-                self._plans[plan.step_id] = plan
-            return plan
-
-        self.sched.schedule = schedule_wrapper   # type: ignore[assignment]
-
         # Rayon pool: requests are serviced one at a time (GIL holds the
         # Python side), each fanning out across the whole thread pool.
         self.sim.spawn("tok-dispatch", self._tokenizer_dispatcher())
@@ -363,6 +362,17 @@ def with_async_copies(params: ServingParams, *, copy_streams: int,
             t_submit_per_copy=t_submit_per_copy)
     return dataclasses.replace(params, device=device, scheduler=sched,
                                decode_device=decode_device)
+
+
+def with_multi_step(params: ServingParams, *, k: int) -> ServingParams:
+    """Multi-step-dispatch variant of ``params`` (docs/multi_step.md):
+    decode-steady batches ride k-step macro-plans, so the scheduler /
+    broadcast / dispatch / barrier round trip — and the device's
+    ``t_fixed`` dispatch floor — are paid once per k decode tokens, the
+    CUDA-Graphs analog benchmarks/multi_step.py sweeps.  ``k=1`` is the
+    per-step baseline, ``params`` itself."""
+    sched = dataclasses.replace(params.scheduler, max_steps_per_dispatch=k)
+    return dataclasses.replace(params, scheduler=sched)
 
 
 def with_hybrid_decode(params: ServingParams, *,
