@@ -74,6 +74,11 @@ def main() -> None:
              "control-floor collapse + backend conformance)")
     multi_step.main(fast=fast)
 
+    from benchmarks import spec_decode
+    _section("beyond-paper: speculative decode on the hybrid seam "
+             "(accept-rate x draft-slowdown sweep, int8 KV copy term)")
+    spec_decode.main(fast=fast)
+
     from benchmarks import hybrid_split
     _section("beyond-paper: split-phase CPU-decode offload crossover "
              "(hybrid vs unified)")

@@ -30,10 +30,26 @@ def __getattr__(name):
     raise AttributeError(name)
 
 
+def _physical_leaf(name: str, cfg, kv_dtype: str = "float32"):
+    if name == "jax":
+        from repro.backend.jax_backend import JaxBackend
+        cls = JaxBackend
+    else:
+        from repro.backend.cpu_decode import CpuDecodeBackend
+        cls = CpuDecodeBackend
+    return cls(block_size=cfg.block_size, num_blocks=cfg.num_kv_blocks,
+               num_swap_blocks=cfg.num_swap_blocks,
+               copy_streams=cfg.copy_streams, kv_dtype=kv_dtype)
+
+
 def make_backend(name: str, *, device=None, scheduler_cfg=None,
                  prefill_backend: str = "emulated",
                  decode_backend: str = "emulated",
-                 decode_slowdown: float = 8.0):
+                 decode_slowdown: float = 8.0,
+                 kv_dtype: str = "float32",
+                 draft_backend: str = "",
+                 draft_slowdown: float = 8.0,
+                 spec_accept_rate=None):
     """Build a backend by name (one of ``BACKEND_NAMES``).
 
     ``device`` feeds the emulated sleep model; ``scheduler_cfg`` sizes the
@@ -45,7 +61,21 @@ def make_backend(name: str, *, device=None, scheduler_cfg=None,
     children; an emulated decode child gets the device's
     ``cpu_tier(decode_slowdown=...)`` cost model (accelerator-class
     prefill, CPU-class decode — docs/backends.md), and the handoff is
-    priced at the prefill device's swap bandwidth."""
+    priced at the prefill device's swap bandwidth.
+
+    ``kv_dtype="int8"`` stores the decode-tier KV pool quantized
+    (docs/spec_decode.md): on a unified backend the whole pool, under
+    ``"hybrid"`` only the decode child — the prefill child stays fp32
+    and the handoff copy is where quantization happens.  The cost model
+    and the handoff price see the halved bytes.
+
+    When ``scheduler_cfg.speculative_k > 0`` the result is wrapped in
+    ``repro.spec.SpeculativeBackend``: ``draft_backend`` names the draft
+    child (default ``"cpu"`` for physical targets, ``"emulated"``
+    otherwise — an emulated draft costs ``cpu_tier(draft_slowdown)`` and
+    models acceptance with ``spec_accept_rate``).  The draft's pool is
+    always fp32: it is the cheap CPU tier, and its candidates are only
+    hints — the verify pass prices the int8 savings."""
     import dataclasses
 
     from repro.core.devmodel import DeviceModel
@@ -56,25 +86,18 @@ def make_backend(name: str, *, device=None, scheduler_cfg=None,
         # one switch, two consumers: the scheduler's epoch bookkeeping and
         # the device cost model must see the same stream count
         device = dataclasses.replace(device, copy_streams=cfg.copy_streams)
+    if kv_dtype not in ("float32", "int8"):
+        raise ValueError(f"kv_dtype must be float32|int8, got {kv_dtype!r}")
+
+    physical = {"jax", "cpu"}
     if name == "emulated":
-        return EmulatedBackend(device)
-    if name == "jax":
-        from repro.backend.jax_backend import JaxBackend
-        return JaxBackend(block_size=cfg.block_size,
-                          num_blocks=cfg.num_kv_blocks,
-                          num_swap_blocks=cfg.num_swap_blocks,
-                          copy_streams=cfg.copy_streams)
-    if name == "cpu":
-        from repro.backend.cpu_decode import CpuDecodeBackend
-        return CpuDecodeBackend(block_size=cfg.block_size,
-                                num_blocks=cfg.num_kv_blocks,
-                                num_swap_blocks=cfg.num_swap_blocks,
-                                copy_streams=cfg.copy_streams)
-    if name == "hybrid":
+        base = EmulatedBackend(device.with_kv_dtype(kv_dtype))
+    elif name in physical:
+        base = _physical_leaf(name, cfg, kv_dtype)
+    elif name == "hybrid":
         from repro.backend.hybrid import HybridBackend
         if "hybrid" in (prefill_backend, decode_backend):
             raise ValueError("hybrid children must be leaf backends")
-        physical = {"jax", "cpu"}
         if (prefill_backend in physical) != (decode_backend in physical):
             # an emulated child computes no KV: pairing it with a physical
             # child silently yields tokens decoded from an all-zero pool
@@ -86,17 +109,46 @@ def make_backend(name: str, *, device=None, scheduler_cfg=None,
                 f"decode={decode_backend!r}")
 
         def child(child_name: str, role: str):
+            # int8 lives on the DECODE tier only: prefill stays fp32 and
+            # the handoff copy quantizes (docs/spec_decode.md)
+            tier_dtype = kv_dtype if role == "decode" else "float32"
             if child_name == "emulated":
                 dev = (device.cpu_tier(decode_slowdown=decode_slowdown)
+                       .with_kv_dtype(tier_dtype)
                        if role == "decode" else device)
                 return EmulatedBackend(dev)
-            return make_backend(child_name, device=device,
-                                scheduler_cfg=cfg)
+            return _physical_leaf(child_name, cfg, tier_dtype)
 
-        return HybridBackend(child(prefill_backend, "prefill"),
-                             child(decode_backend, "decode"),
-                             t_handoff_block=device.t_swap_block,
-                             copy_streams=cfg.copy_streams,
-                             t_submit_per_copy=device.t_submit_per_copy)
-    raise ValueError(f"unknown backend {name!r} "
-                     f"(want one of {BACKEND_NAMES})")
+        base = HybridBackend(
+            child(prefill_backend, "prefill"),
+            child(decode_backend, "decode"),
+            t_handoff_block=device.t_swap_block
+            * (0.5 if kv_dtype == "int8" else 1.0),
+            copy_streams=cfg.copy_streams,
+            t_submit_per_copy=device.t_submit_per_copy)
+    else:
+        raise ValueError(f"unknown backend {name!r} "
+                         f"(want one of {BACKEND_NAMES})")
+
+    if cfg.speculative_k <= 0:
+        return base
+    from repro.spec import SpeculativeBackend
+    target_physical = (name in physical
+                       or (name == "hybrid" and prefill_backend in physical))
+    dname = draft_backend or ("cpu" if target_physical else "emulated")
+    if dname not in ("jax", "cpu", "emulated"):
+        raise ValueError(f"draft_backend must be jax|cpu|emulated, "
+                         f"got {dname!r}")
+    if (dname in physical) != target_physical:
+        # a draft without pages cannot feed a physical verify (and a
+        # physical draft under an emulated target would decode garbage)
+        raise ValueError(
+            f"draft must match the target's physicality: "
+            f"target={'physical' if target_physical else 'emulated'}, "
+            f"draft_backend={dname!r}")
+    if dname == "emulated":
+        draft = EmulatedBackend(
+            device.cpu_tier(decode_slowdown=draft_slowdown))
+    else:
+        draft = _physical_leaf(dname, cfg)          # fp32 draft pool
+    return SpeculativeBackend(draft, base, accept_rate=spec_accept_rate)

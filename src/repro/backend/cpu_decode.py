@@ -36,8 +36,7 @@ class CpuDecodeBackend(PagedSurrogateBackend):
         nb_max = max(tables.shape[1], 1)
         blk = self.block_size
         pages = np.clip(tables, 0, self.num_blocks - 1)       # [rows, nb]
-        k = self.k_pages[:, pages]                 # [KV, rows, nb, blk, D]
-        v = self.v_pages[:, pages]
+        k, v = self._gather_pages(pages)           # [KV, rows, nb, blk, D]
         k = np.moveaxis(k, 1, 0).reshape(rows, KV, nb_max * blk, D)
         v = np.moveaxis(v, 1, 0).reshape(rows, KV, nb_max * blk, D)
         qg = q.reshape(rows, KV, r, D)

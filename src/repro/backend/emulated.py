@@ -47,7 +47,10 @@ class EmulatedBackend:
             # per-step placeholder stream, honoring per-row budgets and
             # EOS (token 0 may BE a row's EOS) so the scheduler's macro
             # accounting sees the same early exits a physical backend
-            # would report
+            # would report.  Speculative verify plans take this same
+            # path at full budget (= every draft accepted); acceptance-
+            # rate modeling lives in SpeculativeBackend.synthesize_result
+            # for the DES (docs/spec_decode.md).
             token_steps = []
             for s in range(plan.num_steps):
                 row = {rid: 0 for rid in plan.decode

@@ -149,11 +149,16 @@ class HybridBackend:
             if rid in plan.new_tokens:
                 dec.new_tokens[rid] = plan.new_tokens[rid]
         if plan.num_steps > 1:
-            # macro-plans are decode-steady by scheduler construction:
-            # the whole k-step inner loop belongs to the decode tier
+            # the k-step inner loop (macro or speculative verify) belongs
+            # to the decode tier; under per-tier macros the prefill child
+            # still chews its chunk as a plain single-step sub-plan
             dec.num_steps = plan.num_steps
             dec.decode_steps = dict(plan.decode_steps)
             dec.eos_tokens = dict(plan.eos_tokens)
+            dec.speculative = plan.speculative
+            dec.draft_tokens = {rid: list(t)
+                                for rid, t in plan.draft_tokens.items()
+                                if rid in plan.decode}
         for rid, pairs in plan.swap_outs.items():
             target = pre if self._tier_of(plan, rid) == PREFILL else dec
             target.swap_outs[rid] = pairs
@@ -171,10 +176,12 @@ class HybridBackend:
         """Block-copy ``rid``'s pages prefill pool -> decode pool (same
         ids — one BlockManager numbers both) and move its sequence
         length.  Copy, not move: prefix pages must stay readable on the
-        prefill tier for later requests that lock them."""
+        prefill tier for later requests that lock them.  Routed through
+        export/import so a mixed-precision seam converts here: an fp32
+        prefill tier hands whole pages to an int8 decode tier, which
+        quantizes them single-shot with per-page scales."""
         src, dst = self.prefill_backend, self.decode_backend
-        dst.k_pages[:, blocks] = src.k_pages[:, blocks]
-        dst.v_pages[:, blocks] = src.v_pages[:, blocks]
+        dst.import_pages(blocks, *src.export_pages(blocks))
         dst._track(rid, seq_len)
 
     # -- Backend protocol ----------------------------------------------------

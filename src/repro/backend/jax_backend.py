@@ -55,16 +55,26 @@ class JaxBackend(PagedSurrogateBackend):
         rows_p = _pow2_at_least(rows, 2)
         nb_p = _pow2_at_least(max(tables.shape[1], 1), 2)
         pool_p = _pow2_at_least(max(len(used), 1), 2)
+        quant = self.kv_dtype == "int8"
         key = (rows_p, nb_p, pool_p)
         if key not in self._attend_cache:
             interpret = self.interpret
 
-            @jax.jit
-            def run(qp, kp, vp, bt, sl, wo):
-                out = paged_decode_attention(qp, kp, vp, bt, sl,
-                                             interpret=interpret)
-                flat = out.reshape(out.shape[0], -1)
-                return flat @ wo
+            if quant:
+                @jax.jit
+                def run(qp, kp, vp, bt, sl, ks, vs, wo):
+                    out = paged_decode_attention(qp, kp, vp, bt, sl,
+                                                 k_scales=ks, v_scales=vs,
+                                                 interpret=interpret)
+                    flat = out.reshape(out.shape[0], -1)
+                    return flat @ wo
+            else:
+                @jax.jit
+                def run(qp, kp, vp, bt, sl, wo):
+                    out = paged_decode_attention(qp, kp, vp, bt, sl,
+                                                 interpret=interpret)
+                    flat = out.reshape(out.shape[0], -1)
+                    return flat @ wo
 
             self._attend_cache[key] = run
         qp = np.zeros((rows_p, self.n_heads, self.head_dim), np.float32)
@@ -74,13 +84,26 @@ class JaxBackend(PagedSurrogateBackend):
         sl = np.zeros((rows_p,), np.int32)
         sl[:rows] = seq_lens
         kc = np.zeros((self.n_kv_heads, pool_p, self.block_size,
-                       self.head_dim), np.float32)
+                       self.head_dim),
+                      np.int8 if quant else np.float32)
         vc = np.zeros_like(kc)
         kc[:, :len(used)] = self.k_pages[:, used]
         vc[:, :len(used)] = self.v_pages[:, used]
-        logits = self._attend_cache[key](
-            jnp.asarray(qp), jnp.asarray(kc), jnp.asarray(vc),
-            jnp.asarray(bt), jnp.asarray(sl), jnp.asarray(self._wo))
+        if quant:
+            # ship int8 codes + per-page scales; the kernel dequantizes
+            # on load, so HBM->VMEM traffic is the halved-byte pool
+            ks = np.zeros((self.n_kv_heads, pool_p), np.float32)
+            vs = np.zeros_like(ks)
+            ks[:, :len(used)] = self.k_scales[:, used]
+            vs[:, :len(used)] = self.v_scales[:, used]
+            logits = self._attend_cache[key](
+                jnp.asarray(qp), jnp.asarray(kc), jnp.asarray(vc),
+                jnp.asarray(bt), jnp.asarray(sl), jnp.asarray(ks),
+                jnp.asarray(vs), jnp.asarray(self._wo))
+        else:
+            logits = self._attend_cache[key](
+                jnp.asarray(qp), jnp.asarray(kc), jnp.asarray(vc),
+                jnp.asarray(bt), jnp.asarray(sl), jnp.asarray(self._wo))
         return np.asarray(logits)[:rows]
 
     # -- fused multi-step decode (docs/multi_step.md) -------------------
@@ -102,6 +125,13 @@ class JaxBackend(PagedSurrogateBackend):
         once, at the end — safe because a macro-plan's rows only append
         to refcount-exclusive tail blocks and never mutate shared prefix
         pages."""
+        if self.kv_dtype == "int8":
+            # int8 pool codes evolve via requant-on-growth host writes;
+            # the functional scan would bypass that scale bookkeeping.
+            # Run the reference per-step loop instead — each step still
+            # attends through the dequant-on-load kernel path.
+            return super()._decode_multi(rids, tables, start, first,
+                                         budgets, eos, k)
         import jax
         import jax.numpy as jnp
 

@@ -20,6 +20,13 @@ they sample identical tokens for identical plans — which is what lets
 prefill->decode transition without changing the completion stream
 (tests/test_backend_conformance.py pins this).
 
+``kv_dtype="int8"`` stores the pools quantized — one byte per element,
+symmetric per-(kv-head, page) scales carried beside the pool — with
+dequant-on-gather in ``_attend`` and requantize-on-amax-growth on write;
+whole pages arriving via swap restore or hybrid handoff are quantized in
+the copy itself (``import_pages``), which is where the prefill->decode
+tier conversion lives.  docs/spec_decode.md states the error invariants.
+
 Sized for in-process use: construct with the scheduler's ``block_size`` /
 ``num_kv_blocks`` (keep ``kv_capacity_tokens`` small — the pool is dense).
 """
@@ -48,7 +55,11 @@ class PagedSurrogateBackend:
     def __init__(self, *, block_size: int, num_blocks: int,
                  num_swap_blocks: int = 0, copy_streams: int = 0,
                  n_heads: int = 4, n_kv_heads: int = 2, head_dim: int = 16,
-                 vocab: int = 256, seed: int = 0, interpret: bool = True):
+                 vocab: int = 256, seed: int = 0, interpret: bool = True,
+                 kv_dtype: str = "float32"):
+        if kv_dtype not in ("float32", "int8"):
+            raise ValueError(f"kv_dtype must be float32|int8, got {kv_dtype}")
+        self.kv_dtype = kv_dtype
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.num_swap_blocks = num_swap_blocks
@@ -79,19 +90,33 @@ class PagedSurrogateBackend:
                 np.float32)
         self._wo = (rng.standard_normal(
             (self._embed_dim, vocab)) * scale).astype(np.float32)
-        # the physical page pool the block tables index into
+        # the physical page pool the block tables index into; int8 mode
+        # carries per-(kv-head, page) symmetric scales beside the codes
+        pool_np = np.int8 if kv_dtype == "int8" else np.float32
         self.k_pages = np.zeros(
-            (n_kv_heads, num_blocks, block_size, head_dim), np.float32)
+            (n_kv_heads, num_blocks, block_size, head_dim), pool_np)
         self.v_pages = np.zeros_like(self.k_pages)
+        if kv_dtype == "int8":
+            self.k_scales = np.zeros((n_kv_heads, num_blocks), np.float32)
+            self.v_scales = np.zeros_like(self.k_scales)
+        else:
+            self.k_scales = self.v_scales = None
         # host swap tier: pages parked here by plan.swap_outs, copied back
-        # by plan.restores (ids from the scheduler's HostSwapSpace)
+        # by plan.restores (ids from the scheduler's HostSwapSpace).  Same
+        # dtype as the device pool: int8 swaps move half the bytes, and
+        # the scales ride along with the pairs.
         if num_swap_blocks > 0:
             self.k_swap = np.zeros(
-                (n_kv_heads, num_swap_blocks, block_size, head_dim),
-                np.float32)
+                (n_kv_heads, num_swap_blocks, block_size, head_dim), pool_np)
             self.v_swap = np.zeros_like(self.k_swap)
+            if kv_dtype == "int8":
+                self.k_swap_scales = np.zeros(
+                    (n_kv_heads, num_swap_blocks), np.float32)
+                self.v_swap_scales = np.zeros_like(self.k_swap_scales)
         else:
             self.k_swap = self.v_swap = None
+        if kv_dtype != "int8" or num_swap_blocks <= 0:
+            self.k_swap_scales = self.v_swap_scales = None
         # rids parked in the host tier: their _seq_lens entry must survive
         # arbitrary churn until the restore arrives (base.Backend contract)
         self._swap_pinned: set = set()
@@ -118,8 +143,78 @@ class PagedSurrogateBackend:
             pos = start + i
             page = table[pos // bs]
             slot = pos % bs
-            self.k_pages[:, page, slot] = k[i]
-            self.v_pages[:, page, slot] = v[i]
+            if self.kv_dtype == "int8":
+                self._quant_store(self.k_pages, self.k_scales, page, slot,
+                                  k[i])
+                self._quant_store(self.v_pages, self.v_scales, page, slot,
+                                  v[i])
+            else:
+                self.k_pages[:, page, slot] = k[i]
+                self.v_pages[:, page, slot] = v[i]
+
+    @staticmethod
+    def _quant_store(pages, scales, page: int, slot: int,
+                     x: np.ndarray) -> None:
+        """Append ``x`` [KV, D] to an int8 page with per-(head, page)
+        symmetric scales.  If the new slot's amax exceeds the page scale,
+        existing codes are requantized to the grown scale first
+        (q' = round(q * s_old / s_new)).  The original quantization costs
+        half an LSB and every requantization adds at most another half an
+        LSB at the grown scale, so after R requants the element error is
+        <= (R + 1)/2 * s_final/127 (docs/spec_decode.md); single-shot
+        whole-page imports (R = 0) stay within half an LSB."""
+        amax = np.abs(x).max(axis=1)                       # [KV]
+        for h in np.nonzero(amax > scales[:, page])[0]:
+            old, new = float(scales[h, page]), float(amax[h])
+            if old > 0.0:
+                pages[h, page] = np.clip(
+                    np.rint(pages[h, page].astype(np.float32) * (old / new)),
+                    -127, 127).astype(np.int8)
+            scales[h, page] = new
+        s = scales[:, page]
+        safe = np.where(s > 0.0, s, 1.0)
+        codes = np.clip(np.rint(x * (127.0 / safe[:, None])), -127, 127)
+        pages[:, page, slot] = codes.astype(np.int8)
+
+    def _gather_pages(self, idx: np.ndarray):
+        """fp32 (k, v) views of pages ``idx`` (any integer index shape),
+        dequantized on gather when the pool is int8 — the decode-tier
+        read path pays int8 bytes and multiplies scales back on load."""
+        k = self.k_pages[:, idx]
+        v = self.v_pages[:, idx]
+        if self.kv_dtype == "int8":
+            k = k.astype(np.float32) * (
+                self.k_scales[:, idx][..., None, None] / 127.0)
+            v = v.astype(np.float32) * (
+                self.v_scales[:, idx][..., None, None] / 127.0)
+        return k, v
+
+    # whole-page movement across tiers: the prefill->decode handoff copy
+    # is exactly where fp32 -> int8 conversion lives (single-shot
+    # per-page scale = amax over the full page)
+
+    def export_pages(self, blocks: List[int]):
+        """fp32 copies of whole pages (dequantized if int8)."""
+        idx = np.asarray(blocks, np.int64)
+        return self._gather_pages(idx)
+
+    def import_pages(self, blocks: List[int], k: np.ndarray,
+                     v: np.ndarray) -> None:
+        """Install fp32 pages [KV, n, block, D]; quantize whole-page when
+        this pool is int8."""
+        idx = np.asarray(blocks, np.int64)
+        if self.kv_dtype == "int8":
+            for pages, scales, x in ((self.k_pages, self.k_scales, k),
+                                     (self.v_pages, self.v_scales, v)):
+                amax = np.abs(x).max(axis=(2, 3))          # [KV, n]
+                safe = np.where(amax > 0.0, amax, 1.0)
+                pages[:, idx] = np.clip(
+                    np.rint(x * (127.0 / safe[:, :, None, None])),
+                    -127, 127).astype(np.int8)
+                scales[:, idx] = amax
+        else:
+            self.k_pages[:, idx] = k
+            self.v_pages[:, idx] = v
 
     def _track(self, rid: int, seq_len: int) -> None:
         self._seq_lens.put(rid, seq_len)
@@ -130,11 +225,17 @@ class PagedSurrogateBackend:
         for dev_b, host_b in pairs:
             self.k_swap[:, host_b] = self.k_pages[:, dev_b]
             self.v_swap[:, host_b] = self.v_pages[:, dev_b]
+            if self.kv_dtype == "int8":
+                self.k_swap_scales[:, host_b] = self.k_scales[:, dev_b]
+                self.v_swap_scales[:, host_b] = self.v_scales[:, dev_b]
 
     def _copy_back(self, pairs: List[tuple]) -> None:
         for host_b, dev_b in pairs:
             self.k_pages[:, dev_b] = self.k_swap[:, host_b]
             self.v_pages[:, dev_b] = self.v_swap[:, host_b]
+            if self.kv_dtype == "int8":
+                self.k_scales[:, dev_b] = self.k_swap_scales[:, host_b]
+                self.v_scales[:, dev_b] = self.v_swap_scales[:, host_b]
 
     # -- the batched attention step ------------------------------------------
 
@@ -191,26 +292,21 @@ class PagedSurrogateBackend:
             else:
                 self._copy_back(pairs)
 
+        # speculative verify plan (docs/spec_decode.md): score the carried
+        # token plus the attached draft tokens in one batched step, emit
+        # the greedy-accepted prefix + correction token.
+        if plan.speculative:
+            return self._execute_spec(plan, tables, t0)
         # multi-step macro-plan (docs/multi_step.md): run the k-iteration
         # decode loop and return its per-step token stream.  Macro-plans
-        # are decode-steady by scheduler construction (no prefill, no
-        # swap directives), but deferred copies from the PREVIOUS epoch
-        # were just flushed above, as the contract requires.
+        # carry no swap directives by scheduler construction (deferred
+        # copies from the PREVIOUS epoch were just flushed above, as the
+        # contract requires); with per-tier macros they MAY carry prefill
+        # chunks, which run once alongside the k decode iterations.
         if plan.num_steps > 1:
             return self._execute_multi(plan, tables, t0)
 
-        rows: List[tuple] = []                # (rid, q_token, seq_len, table)
-        for rid, start, n in plan.prefill:
-            table = tables.get(rid, [])
-            toks = np.asarray(plan.new_tokens.get(rid, [0] * n), np.int64)
-            if len(toks) == 0:        # defensive: degenerate empty chunk
-                self._track(rid, start)
-                continue
-            self._write(table, start, toks)
-            self._track(rid, start + n)
-            # logits from the chunk's last position: becomes the first
-            # sampled token iff this chunk completes the prompt
-            rows.append((rid, int(toks[-1]), start + n, table))
+        rows = self._prefill_rows(plan, tables)
         for rid in plan.decode:
             table = tables.get(rid, [])
             tok = int(plan.new_tokens.get(rid, [0])[0])
@@ -219,6 +315,31 @@ class PagedSurrogateBackend:
             self._track(rid, pos + 1)
             rows.append((rid, tok, pos + 1, table))
 
+        tokens = self._sample_rows(rows)
+        self._last_wall = time.perf_counter() - t0
+        return StepResult(step_id=plan.step_id, tokens=tokens,
+                          wall_s=self._last_wall)
+
+    def _prefill_rows(self, plan: StepPlan,
+                      tables: Dict[int, List[int]]) -> List[tuple]:
+        """Apply the plan's prefill chunks; returns sample rows
+        (rid, q_token, seq_len, table) for the chunks' last positions —
+        the sampled token counts iff the chunk completes the prompt."""
+        rows: List[tuple] = []
+        for rid, start, n in plan.prefill:
+            table = tables.get(rid, [])
+            toks = np.asarray(plan.new_tokens.get(rid, [0] * n), np.int64)
+            if len(toks) == 0:        # defensive: degenerate empty chunk
+                self._track(rid, start)
+                continue
+            self._write(table, start, toks)
+            self._track(rid, start + n)
+            rows.append((rid, int(toks[-1]), start + n, table))
+        return rows
+
+    def _sample_rows(self, rows: List[tuple]) -> Dict[int, int]:
+        """One batched attend + greedy sample over (rid, tok, seq_len,
+        table) rows."""
         tokens: Dict[int, int] = {}
         if rows:
             nb_max = max(len(t) for _, _, _, t in rows)
@@ -233,10 +354,7 @@ class PagedSurrogateBackend:
             logits = self._attend(q, bt, sl)
             for i, (rid, _, _, _) in enumerate(rows):
                 tokens[rid] = int(np.argmax(logits[i]))
-
-        self._last_wall = time.perf_counter() - t0
-        return StepResult(step_id=plan.step_id, tokens=tokens,
-                          wall_s=self._last_wall)
+        return tokens
 
     # -- multi-step macro-plans (docs/multi_step.md) --------------------
 
@@ -246,6 +364,8 @@ class PagedSurrogateBackend:
         per-step token stream.  ``_decode_multi`` is the execution seam
         (host loop here; ``JaxBackend`` overrides it with a fused
         ``lax.scan`` so sampled tokens feed back device-side)."""
+        tokens: Dict[int, int] = self._sample_rows(
+            self._prefill_rows(plan, tables))     # per-tier macro prefill
         rids = list(plan.decode)
         tbls = {rid: tables.get(rid, []) for rid in rids}
         start = {rid: self._seq_lens.get(rid, 0) for rid in rids}
@@ -255,7 +375,6 @@ class PagedSurrogateBackend:
         eos = {rid: plan.eos_tokens.get(rid) for rid in rids}
         steps = self._decode_multi(rids, tbls, start, first, budgets, eos,
                                    plan.num_steps)
-        tokens: Dict[int, int] = {}
         for row in steps:
             tokens.update(row)
         for rid in rids:
@@ -264,6 +383,95 @@ class PagedSurrogateBackend:
         self._last_wall = time.perf_counter() - t0
         return StepResult(step_id=plan.step_id, tokens=tokens,
                           wall_s=self._last_wall, token_steps=steps)
+
+    # -- speculative verify (docs/spec_decode.md) ------------------------
+
+    def _execute_spec(self, plan: StepPlan, tables: Dict[int, List[int]],
+                      t0: float) -> StepResult:
+        """Verify a speculative plan: for each decode row, score the
+        carried token plus its attached draft tokens (``plan.draft_tokens``,
+        installed worker-side by ``repro.spec.SpeculativeBackend``) at
+        k+1 positions in ONE batched attend, then emit the longest
+        greedy-accepted draft prefix plus the correction token.  The
+        result is macro-plan-shaped (``token_steps``), so the scheduler's
+        existing consumption + ``_rollback_unused`` reclaim the rejected
+        suffix's KV."""
+        tokens: Dict[int, int] = self._sample_rows(
+            self._prefill_rows(plan, tables))     # per-tier macro prefill
+        rids = list(plan.decode)
+        tbls = {rid: tables.get(rid, []) for rid in rids}
+        start = {rid: self._seq_lens.get(rid, 0) for rid in rids}
+        first = {rid: int(plan.new_tokens.get(rid, [0])[0]) for rid in rids}
+        budgets = {rid: plan.decode_steps.get(rid, plan.num_steps)
+                   for rid in rids}
+        eos = {rid: plan.eos_tokens.get(rid) for rid in rids}
+        drafts = {rid: list(plan.draft_tokens.get(rid, ())) for rid in rids}
+        steps = self._verify_multi(rids, tbls, start, first, budgets, eos,
+                                   drafts)
+        for row in steps:
+            tokens.update(row)
+        for rid in rids:
+            emitted = sum(1 for row in steps if rid in row)
+            self._track(rid, start[rid] + emitted)
+        self._last_wall = time.perf_counter() - t0
+        return StepResult(step_id=plan.step_id, tokens=tokens,
+                          wall_s=self._last_wall, token_steps=steps)
+
+    def _verify_multi(self, rids: List[int], tables: Dict[int, List[int]],
+                      start: Dict[int, int], first: Dict[int, int],
+                      budgets: Dict[int, int], eos: Dict[int, Optional[int]],
+                      drafts: Dict[int, List[int]]) -> List[Dict[int, int]]:
+        """Batched draft verification.  Inputs for row i of a request are
+        ``[first, d_1, .., d_{b-1}]`` (clipped to the plan's budget b);
+        K/V for ALL of them is written up front, then every (request,
+        position) pair attends in one ``_attend`` call with seq_len
+        ``start + i + 1`` — the output of position i is the model's true
+        next token v_i after feeding inputs 0..i.  Greedy acceptance:
+        accept drafts while v_i == d_{i+1}; the emitted stream is the
+        accepted drafts plus the first correction token, truncated at
+        EOS — bit-identical to sequential greedy decode regardless of
+        draft quality (fp32 pools; int8 is numerically self-consistent
+        but quantized).  Rejected-suffix positions sit beyond the final
+        tracked seq_len: attention masks them and the scheduler's
+        ``_rollback_unused`` frees their whole blocks."""
+        inputs: Dict[int, List[int]] = {}
+        rows: List[tuple] = []                             # (rid, i, tok)
+        for rid in rids:
+            b = max(budgets[rid], 1)
+            ins = ([first[rid]] + [int(t) for t in drafts[rid]])[:b]
+            inputs[rid] = ins
+            self._write(tables[rid], start[rid],
+                        np.asarray(ins, np.int64))
+            rows.extend((rid, i, tok) for i, tok in enumerate(ins))
+        nb_max = max((len(tables[rid]) for rid in rids), default=0)
+        q = np.zeros((len(rows), self.n_heads, self.head_dim), np.float32)
+        bt = np.full((len(rows), max(nb_max, 1)), -1, np.int32)
+        sl = np.zeros((len(rows),), np.int32)
+        for j, (rid, i, tok) in enumerate(rows):
+            e = self._emb(np.asarray([tok]))[0]
+            q[j] = (e @ self._wq).reshape(self.n_heads, self.head_dim)
+            bt[j, :len(tables[rid])] = tables[rid]
+            sl[j] = start[rid] + i + 1
+        logits = self._attend(q, bt, sl) if rows else np.zeros((0, 1))
+        verify: Dict[tuple, int] = {}
+        for j, (rid, i, _) in enumerate(rows):
+            verify[(rid, i)] = int(np.argmax(logits[j]))
+        steps: List[Dict[int, int]] = []
+        for rid in rids:
+            ins = inputs[rid]
+            emitted: List[int] = []
+            for i in range(len(ins)):
+                v = verify[(rid, i)]
+                emitted.append(v)
+                if eos[rid] is not None and v == eos[rid]:
+                    break                                  # stream ends here
+                if i + 1 >= len(ins) or v != ins[i + 1]:
+                    break                 # v is the correction token
+            for s_i, tok in enumerate(emitted):
+                while len(steps) <= s_i:
+                    steps.append({})
+                steps[s_i][rid] = tok
+        return steps
 
     def _decode_multi(self, rids: List[int], tables: Dict[int, List[int]],
                       start: Dict[int, int], first: Dict[int, int],

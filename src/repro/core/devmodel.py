@@ -42,6 +42,17 @@ class DeviceModel:
     t_block_entry: float = 2e-8     # per KV block-table entry in the plan
     t_swap_block: float = 5e-5      # per KV block copied host<->device
     max_step: float = 1.0
+    # -- speculative verify (docs/spec_decode.md) --
+    # a verify step scores all k+1 positions of a row in one batched
+    # pass, so each position prices like a prefill token, not like a
+    # sequential decode iteration; < 0 defaults to t_prefill_tok
+    t_verify_tok: float = -1.0
+    # -- KV precision (docs/spec_decode.md) --
+    # bytes-per-element ratio of the KV pool vs fp32 (int8 -> 0.5):
+    # scales every KV byte the model charges — swap/handoff block copies
+    # outright, and the KV-bandwidth share of decode compute
+    kv_byte_factor: float = 1.0
+    kv_read_fraction: float = 0.5   # share of t_decode_seq that is KV reads
     # -- async copy engine (repro.core.copyengine, docs/copy_engine.md) --
     # 0 = serialized copies (the pre-engine model: transfers charged
     # inline); >= 1 DMA-style streams drain swap traffic concurrently
@@ -51,30 +62,56 @@ class DeviceModel:
 
     def step_time(self, plan: StepPlan) -> float:
         pre = sum(l for _, _, l in plan.prefill)
-        # multi-step macro-plan (docs/multi_step.md): the dispatch /
-        # collective floor and the table upload are paid ONCE per
-        # broadcast — the CUDA-Graphs mechanism — while decode compute
-        # scales with the total inner iterations actually budgeted
-        n_decode = len(plan.decode)
-        if plan.num_steps > 1:
-            n_decode = sum(plan.decode_steps.get(rid, plan.num_steps)
-                           for rid in plan.decode)
-        compute = (self.t_fixed + pre * self.t_prefill_tok
-                   + n_decode * self.t_decode_seq
-                   + plan.n_new_table_entries * self.t_block_entry)
+        # KV-bandwidth share of decode shrinks with the pool's byte
+        # factor (int8 halves the bytes every decode read streams)
+        dec_eff = self.t_decode_seq * (
+            1.0 - self.kv_read_fraction * (1.0 - self.kv_byte_factor))
+        if plan.speculative:
+            # speculative verify (docs/spec_decode.md): ONE batched pass
+            # scores every budgeted position, so positions price like
+            # prefill tokens; the per-sequence decode overhead (KV
+            # stream + sampling) is paid once, not per inner iteration
+            t_verify = (self.t_verify_tok if self.t_verify_tok >= 0.0
+                        else self.t_prefill_tok)
+            positions = sum(plan.decode_steps.get(rid, plan.num_steps)
+                            for rid in plan.decode)
+            compute = (self.t_fixed + pre * self.t_prefill_tok
+                       + len(plan.decode) * dec_eff
+                       + positions * t_verify
+                       + plan.n_new_table_entries * self.t_block_entry)
+        else:
+            # multi-step macro-plan (docs/multi_step.md): the dispatch /
+            # collective floor and the table upload are paid ONCE per
+            # broadcast — the CUDA-Graphs mechanism — while decode compute
+            # scales with the total inner iterations actually budgeted
+            n_decode = len(plan.decode)
+            if plan.num_steps > 1:
+                n_decode = sum(plan.decode_steps.get(rid, plan.num_steps)
+                               for rid in plan.decode)
+            compute = (self.t_fixed + pre * self.t_prefill_tok
+                       + n_decode * dec_eff
+                       + plan.n_new_table_entries * self.t_block_entry)
         t = overlapped_seconds(
             compute, plan.n_swapped_blocks,
-            copy_streams=self.copy_streams, t_copy_block=self.t_swap_block,
+            copy_streams=self.copy_streams,
+            t_copy_block=self.t_swap_block * self.kv_byte_factor,
             t_submit_per_copy=self.t_submit_per_copy)
         return min(t, self.max_step * plan.num_steps)
 
     def preemption_calibration(self) -> dict:
         """SchedulerConfig kwargs so the adaptive preemption policy prices
         swap round-trips vs recompute with THIS device's coefficients
-        (and the victim time-to-release term with its decode speed)."""
-        return {"t_swap_block": self.t_swap_block,
+        (and the victim time-to-release term with its decode speed) —
+        including the KV byte factor, so int8 pools price swaps at their
+        actual halved bytes."""
+        return {"t_swap_block": self.t_swap_block * self.kv_byte_factor,
                 "t_recompute_token": self.t_prefill_tok,
                 "t_release_token": self.t_decode_seq}
+
+    def with_kv_dtype(self, kv_dtype: str) -> "DeviceModel":
+        """This device with its KV pool stored at ``kv_dtype`` width."""
+        return dataclasses.replace(
+            self, kv_byte_factor=0.5 if kv_dtype == "int8" else 1.0)
 
     def copy_calibration(self) -> dict:
         """SchedulerConfig kwargs enabling the scheduler's in-flight

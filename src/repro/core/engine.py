@@ -48,6 +48,12 @@ class EngineConfig:
     prefill_backend: str = "emulated"
     decode_backend: str = "emulated"
     decode_slowdown: float = 8.0
+    # speculative decode (docs/spec_decode.md): active when
+    # scheduler.speculative_k > 0 — the worker wraps its backend in
+    # repro.spec.SpeculativeBackend with this draft child
+    draft_backend: str = ""                 # "" = default for the target
+    # KV pool precision on the decode tier ("float32" | "int8")
+    kv_dtype: str = "float32"
     ring_slots: int = 8
     # 0 = auto-size from the scheduler config: plans carry block tables +
     # input ids, so a slot must hold max_tokens_per_step input ids plus the
@@ -204,7 +210,9 @@ def _worker(cfg: EngineConfig, idx: int, ring_name: str, board_name: str,
                            scheduler_cfg=cfg.scheduler,
                            prefill_backend=cfg.prefill_backend,
                            decode_backend=cfg.decode_backend,
-                           decode_slowdown=cfg.decode_slowdown)
+                           decode_slowdown=cfg.decode_slowdown,
+                           kv_dtype=cfg.kv_dtype,
+                           draft_backend=cfg.draft_backend)
     tables = BlockTableTracker()      # delta plans -> full tables
     while True:
         payload, _ = reader.dequeue(timeout=600.0,

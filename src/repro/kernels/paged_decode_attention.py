@@ -16,10 +16,27 @@ the sequence's block table with a ``fori_loop``, streaming one
 flash-decoding recurrence).  GQA group r = H/KV: the query heads of one kv
 head form the rows of an ``[r, block]`` MXU tile.
 
-Demo-scale note: the page pool is mapped whole into VMEM, which is honest
-for the CPU-interpret serving backend this repo runs (and for small pools
-on real TPUs); a production HBM-resident pool would DMA pages in with
-``make_async_copy`` double-buffering instead — same loop structure.
+Two residency modes for the page pool (``pool_in_vmem``):
+
+* ``pool_in_vmem=True`` — the whole pool is mapped into VMEM by the
+  BlockSpec and pages are sliced directly.  Fast path for tiny pools
+  (no DMA latency to hide) and the only mode the repo shipped before the
+  HBM variant landed.
+* ``pool_in_vmem=False`` — production shape: the pool stays HBM-resident
+  (``memory_space=ANY``); the kernel DMAs one page per loop iteration
+  into a 2-deep VMEM scratch ring with ``make_async_copy``
+  double-buffering (start page j+1, wait page j, compute page j), so the
+  page fetch for the next iteration overlaps the MXU work of the current
+  one.  Same online-softmax loop.
+
+``pool_in_vmem=None`` (default) picks automatically: VMEM if both pools'
+per-kv-head footprint fits ``vmem_budget_bytes``, else DMA.
+
+int8 KV (``k_pages.dtype == int8`` + per-page ``k_scales``/``v_scales``
+``[KV, N_blocks]``): pages move at one byte per element — half the
+HBM traffic of fp16, a quarter of fp32 — and are dequantized on load
+(``x = q * scale / 127``) right after the copy lands, before the softmax
+update.  docs/spec_decode.md covers the quantization invariants.
 """
 from __future__ import annotations
 
@@ -32,81 +49,198 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# Per-kv-head VMEM budget for the auto pool_in_vmem decision: both pools'
+# single-head slices (the BlockSpec maps one kv head per program) must fit
+# alongside scratch.  Half of a v5e core's ~128 MiB VMEM, conservatively.
+VMEM_BUDGET_BYTES = 64 * 1024 * 1024
 
-def _kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref, *,
-            block: int, nb_max: int, scale: float):
-    q = q_ref[0]                                      # [r, D]
+
+def _softmax_update(q, k, v, blk, j, seq_len, carry, *, block, scale, offs):
+    """One page of the flash-decoding online-softmax recurrence."""
+    m_prev, l_prev, acc = carry
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale       # [r, block]
+    pos = j * block + offs                                # [1, block]
+    valid = (pos < seq_len) & (blk >= 0)
+    s = jnp.where(valid, s, NEG_INF)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_cur = l_prev * alpha + jnp.sum(p, axis=1)
+    acc = (acc * alpha[:, None]
+           + jax.lax.dot_general(
+               p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+               preferred_element_type=jnp.float32))
+    return m_cur, l_cur, acc
+
+
+def _finish(l, acc, o_ref):
+    safe = jnp.where(l == 0.0, 1.0, l)                    # fully-masked rows
+    o_ref[0] = (acc / safe[:, None]).astype(o_ref.dtype)
+
+
+def _kernel_vmem(len_ref, tbl_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+                 o_ref, *, block, nb_max, scale, quantized):
+    """Whole pool VMEM-resident: slice pages directly (tiny-pool fast
+    path)."""
+    q = q_ref[0]                                          # [r, D]
     seq_len = len_ref[0]
     r, d = q.shape
     offs = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
 
     def body(j, carry):
-        m_prev, l_prev, acc = carry
         blk = tbl_ref[0, j]
-        page = jnp.maximum(blk, 0)                    # pad entries are -1
-        k = k_ref[0, pl.ds(page, 1)][0]               # [block, D]
+        page = jnp.maximum(blk, 0)                        # pad entries are -1
+        k = k_ref[0, pl.ds(page, 1)][0]                   # [block, D]
         v = v_ref[0, pl.ds(page, 1)][0]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # [r, block]
-        pos = j * block + offs                        # [1, block]
-        valid = (pos < seq_len) & (blk >= 0)
-        s = jnp.where(valid, s, NEG_INF)
-        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        alpha = jnp.exp(m_prev - m_cur)
-        p = jnp.exp(s - m_cur[:, None])
-        l_cur = l_prev * alpha + jnp.sum(p, axis=1)
-        acc = (acc * alpha[:, None]
-               + jax.lax.dot_general(
-                   p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-                   preferred_element_type=jnp.float32))
-        return m_cur, l_cur, acc
+        if quantized:
+            k = k.astype(jnp.float32) * (ks_ref[0, page] / 127.0)
+            v = v.astype(jnp.float32) * (vs_ref[0, page] / 127.0)
+        return _softmax_update(q, k, v, blk, j, seq_len, carry,
+                               block=block, scale=scale, offs=offs)
 
     m0 = jnp.full((r,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((r,), jnp.float32)
     acc0 = jnp.zeros((r, d), jnp.float32)
     _, l, acc = jax.lax.fori_loop(0, nb_max, body, (m0, l0, acc0))
-    safe = jnp.where(l == 0.0, 1.0, l)                # fully-masked rows
-    o_ref[0] = (acc / safe[:, None]).astype(o_ref.dtype)
+    _finish(l, acc, o_ref)
+
+
+def _kernel_hbm(len_ref, tbl_ref, ks_ref, vs_ref, q_ref, k_hbm, v_hbm,
+                o_ref, k_buf, v_buf, k_sem, v_sem, *,
+                block, nb_max, scale, quantized):
+    """HBM-resident pool: DMA one page per iteration into a 2-slot VMEM
+    ring, double-buffered (issue j+1 before consuming j)."""
+    g = pl.program_id(1)
+    q = q_ref[0]                                          # [r, D]
+    seq_len = len_ref[0]
+    r, d = q.shape
+    offs = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+
+    def dma(j, slot):
+        page = jnp.maximum(tbl_ref[0, j], 0)
+        return (
+            pltpu.make_async_copy(k_hbm.at[g, pl.ds(page, 1)],
+                                  k_buf.at[pl.ds(slot, 1)], k_sem.at[slot]),
+            pltpu.make_async_copy(v_hbm.at[g, pl.ds(page, 1)],
+                                  v_buf.at[pl.ds(slot, 1)], v_sem.at[slot]),
+        )
+
+    def start(j, slot):
+        ck, cv = dma(j, slot)
+        ck.start()
+        cv.start()
+
+    start(0, 0)                                           # warm-up fetch
+
+    def body(j, carry):
+        slot = j % 2
+
+        @pl.when(j + 1 < nb_max)
+        def _():                                          # overlap next fetch
+            start(j + 1, (j + 1) % 2)
+
+        ck, cv = dma(j, slot)
+        ck.wait()
+        cv.wait()
+        blk = tbl_ref[0, j]
+        page = jnp.maximum(blk, 0)
+        k = k_buf[pl.ds(slot, 1)][0]                      # [block, D]
+        v = v_buf[pl.ds(slot, 1)][0]
+        if quantized:
+            k = k.astype(jnp.float32) * (ks_ref[0, page] / 127.0)
+            v = v.astype(jnp.float32) * (vs_ref[0, page] / 127.0)
+        return _softmax_update(q, k, v, blk, j, seq_len, carry,
+                               block=block, scale=scale, offs=offs)
+
+    m0 = jnp.full((r,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((r,), jnp.float32)
+    acc0 = jnp.zeros((r, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nb_max, body, (m0, l0, acc0))
+    _finish(l, acc, o_ref)
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           k_scales=None, v_scales=None,
+                           pool_in_vmem: bool | None = None,
+                           vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
                            interpret: bool = False):
     """q: [B, H, D]; k/v_pages: [KV, N_blocks, block, D];
     block_tables: [B, nb_max] i32 page ids (-1 = padding);
-    seq_lens: [B] i32 valid cache length per sequence (0 = inert row).
-    Returns [B, H, D]."""
+    seq_lens: [B] i32 valid cache length per sequence (0 = inert row);
+    k/v_scales: [KV, N_blocks] f32 per-page scales, required iff the pools
+    are int8 (dequant-on-load: ``x = q * scale / 127``).
+    Returns [B, H, D] in q.dtype."""
     B, H, D = q.shape
     KV, N, block, _ = k_pages.shape
     assert H % KV == 0
     r = H // KV
     nb_max = block_tables.shape[1]
     scale = 1.0 / (D ** 0.5)
+    quantized = jnp.dtype(k_pages.dtype) == jnp.int8
+    if quantized and (k_scales is None or v_scales is None):
+        raise ValueError("int8 pages need k_scales/v_scales [KV, N_blocks]")
+    if k_scales is None:
+        k_scales = jnp.zeros((KV, N), jnp.float32)        # unused (fp32 path)
+        v_scales = k_scales
+    if pool_in_vmem is None:
+        per_head = 2 * N * block * D * jnp.dtype(k_pages.dtype).itemsize
+        pool_in_vmem = per_head <= vmem_budget_bytes
     qg = q.reshape(B, KV, r, D).reshape(B * KV, r, D)
 
-    kernel = functools.partial(_kernel, block=block, nb_max=nb_max,
-                               scale=scale)
-    out = pl.pallas_call(
-        kernel,
-        grid=(B, KV),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b, g: (b,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, nb_max), lambda b, g: (b, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, r, D), lambda b, g: (b * KV + g, 0, 0)),
-            pl.BlockSpec((1, N, block, D), lambda b, g: (g, 0, 0, 0)),
-            pl.BlockSpec((1, N, block, D), lambda b, g: (g, 0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, r, D), lambda b, g: (b * KV + g, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * KV, r, D), q.dtype),
-        interpret=interpret,
-    )(seq_lens, block_tables, qg, k_pages, v_pages)
+    scalar_specs = [
+        pl.BlockSpec((1,), lambda b, g: (b,), memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, nb_max), lambda b, g: (b, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, N), lambda b, g: (g, 0), memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, N), lambda b, g: (g, 0), memory_space=pltpu.SMEM),
+    ]
+    q_spec = pl.BlockSpec((1, r, D), lambda b, g: (b * KV + g, 0, 0))
+    out_spec = pl.BlockSpec((1, r, D), lambda b, g: (b * KV + g, 0, 0))
+
+    if pool_in_vmem:
+        kernel = functools.partial(_kernel_vmem, block=block, nb_max=nb_max,
+                                   scale=scale, quantized=quantized)
+        pool_spec = pl.BlockSpec((1, N, block, D), lambda b, g: (g, 0, 0, 0))
+        out = pl.pallas_call(
+            kernel,
+            grid=(B, KV),
+            in_specs=scalar_specs + [q_spec, pool_spec, pool_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((B * KV, r, D), q.dtype),
+            interpret=interpret,
+        )(seq_lens, block_tables, k_scales, v_scales, qg, k_pages, v_pages)
+    else:
+        kernel = functools.partial(_kernel_hbm, block=block, nb_max=nb_max,
+                                   scale=scale, quantized=quantized)
+        hbm_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        buf = pltpu.VMEM((2, block, D), k_pages.dtype)
+        out = pl.pallas_call(
+            kernel,
+            grid=(B, KV),
+            in_specs=scalar_specs + [q_spec, hbm_spec, hbm_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((B * KV, r, D), q.dtype),
+            scratch_shapes=[buf, buf, pltpu.SemaphoreType.DMA((2,)),
+                            pltpu.SemaphoreType.DMA((2,))],
+            interpret=interpret,
+        )(seq_lens, block_tables, k_scales, v_scales, qg, k_pages, v_pages)
     return out.reshape(B, H, D)
 
 
+def dequantize_pages(pages, scales):
+    """int8 pages [KV, N, block, D] + per-page scales [KV, N] -> fp32."""
+    return pages.astype(jnp.float32) * (scales[:, :, None, None] / 127.0)
+
+
 def paged_decode_attention_reference(q, k_pages, v_pages, block_tables,
-                                     seq_lens):
+                                     seq_lens, *, k_scales=None,
+                                     v_scales=None):
     """Gather-then-softmax reference (jnp only) for conformance tests."""
+    if k_scales is not None:
+        k_pages = dequantize_pages(k_pages, k_scales)
+        v_pages = dequantize_pages(v_pages, v_scales)
     B, H, D = q.shape
     KV, N, block, _ = k_pages.shape
     r = H // KV

@@ -83,6 +83,28 @@ def main() -> None:
                          "decode-steady batches run up to k decode "
                          "iterations per broadcast/barrier round trip — "
                          "the CUDA-Graphs analog; 1 = per-step dispatch")
+    ap.add_argument("--speculative-k", type=int, default=0,
+                    help="speculative decode (docs/spec_decode.md): draft "
+                         "up to k candidate tokens per request on the "
+                         "draft backend and verify them in one batched "
+                         "step; 0 = off.  Takes precedence over "
+                         "--multi-step for eligible batches")
+    ap.add_argument("--draft-backend", default="",
+                    choices=("", "jax", "cpu", "emulated"),
+                    help="speculative draft child (default: cpu when the "
+                         "target is physical, emulated otherwise); must "
+                         "match the target's physicality")
+    ap.add_argument("--kv-dtype", default="float32",
+                    choices=("float32", "int8"),
+                    help="decode-tier KV pool precision "
+                         "(docs/spec_decode.md): int8 halves KV bytes — "
+                         "quantization lives in the prefill->decode "
+                         "handoff and the swap path, with per-page scales")
+    ap.add_argument("--per-tier-macros", action="store_true",
+                    help="allow macro/speculative plans while prefill "
+                         "chunks are in flight (per-tier eligibility, "
+                         "docs/multi_step.md) — natural fit for hybrid, "
+                         "where the tiers execute concurrently")
     ap.add_argument("--victim-selection", default="lifo",
                     choices=("lifo", "cheapest"),
                     help="preemption victim choice: most recently admitted "
@@ -106,6 +128,14 @@ def main() -> None:
         # the completion board until its timeout
         ap.error("hybrid children must be both physical (jax/cpu) or "
                  "both emulated")
+    if args.speculative_k > 0 and args.draft_backend:
+        target_physical = (args.backend in ("jax", "cpu")
+                           or (args.backend == "hybrid"
+                               and args.prefill_backend in ("jax", "cpu")))
+        if (args.draft_backend in ("jax", "cpu")) != target_physical:
+            # same fail-fast rationale as the hybrid-children check above
+            ap.error("--draft-backend must match the target's physicality "
+                     "(physical target -> jax/cpu draft)")
     got = cpu_budget(args.cores)
     physical = {args.backend} | ({args.prefill_backend, args.decode_backend}
                                  if args.backend == "hybrid" else set())
@@ -133,6 +163,8 @@ def main() -> None:
             victim_selection=args.victim_selection,
             delta_block_tables=not args.no_delta_tables,
             max_steps_per_dispatch=args.multi_step,
+            speculative_k=args.speculative_k,
+            per_tier_macros=args.per_tier_macros,
             t_swap_block_decode=(
                 device.cpu_tier(
                     decode_slowdown=args.decode_slowdown).t_swap_block
@@ -143,6 +175,8 @@ def main() -> None:
         prefill_backend=args.prefill_backend,
         decode_backend=args.decode_backend,
         decode_slowdown=args.decode_slowdown,
+        draft_backend=args.draft_backend,
+        kv_dtype=args.kv_dtype,
         ring_slot_bytes=args.ring_slot_bytes,
         yield_every=args.yield_every, async_sched=args.async_sched,
     )
@@ -155,7 +189,8 @@ def main() -> None:
           f"preemption={args.preemption_policy} "
           f"victims={args.victim_selection} "
           f"copy_streams={args.copy_streams} "
-          f"multi_step={args.multi_step}")
+          f"multi_step={args.multi_step} "
+          f"speculative_k={args.speculative_k} kv_dtype={args.kv_dtype}")
     text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
 
     sys_ = ServingSystem(cfg).start()

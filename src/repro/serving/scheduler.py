@@ -130,6 +130,24 @@ class SchedulerConfig:
     # remaining decode length; EOS/max-len early exits roll the unused
     # reservation back at completion.  1 = per-step dispatch (default).
     max_steps_per_dispatch: int = 1
+    # -- per-tier macro eligibility (docs/multi_step.md) ----------------
+    # Relax the decode-steady requirement: a plan may still extend into a
+    # macro (or speculative verify) while OTHER running requests are
+    # mid-prefill, as long as every running request is covered by this
+    # very plan (decoding in it, or its prefill chunk rides it).  Under a
+    # split-phase backend this lets the decode tier run k steps while
+    # the prefill tier chews a long prompt — the PR-6 follow-on.  Swap
+    # traffic / queues / drop notices still force per-step dispatch.
+    per_tier_macros: bool = False
+    # -- speculative decoding (docs/spec_decode.md) ---------------------
+    # k > 0: eligible decode plans become speculative verify plans
+    # (num_steps = k + 1): the draft child decodes up to k candidate
+    # tokens per request worker-side, the verify child scores them all in
+    # one batched step, and the accepted prefix + correction token come
+    # back through the macro-plan ``token_steps`` stream (rejected-suffix
+    # KV is rolled back like an EOS early-exit).  Takes precedence over
+    # ``max_steps_per_dispatch`` when both are set.  0 = off.
+    speculative_k: int = 0
     # -- victim selection: time-to-release term (docs/preemption.md) ----
     # Modeled seconds of device decode per token the victim still owes
     # before it would release its blocks anyway.  A victim near the end
@@ -154,6 +172,9 @@ class SchedulerConfig:
             raise ValueError(
                 f"max_steps_per_dispatch={self.max_steps_per_dispatch} "
                 f"(want >= 1)")
+        if self.speculative_k < 0:
+            raise ValueError(
+                f"speculative_k={self.speculative_k} (want >= 0)")
         if self.preemption_policy not in PREEMPTION_POLICIES:
             raise ValueError(
                 f"preemption_policy={self.preemption_policy!r} "
@@ -230,6 +251,17 @@ class StepPlan:
     num_steps: int = 1
     decode_steps: Dict[int, int] = dataclasses.field(default_factory=dict)
     eos_tokens: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # -- speculative verify plan (docs/spec_decode.md) ------------------
+    # speculative=True: a macro-shaped plan whose ``decode_steps[rid]``
+    # budget b covers ONE verify pass over [carried token, k drafts]
+    # rather than b sequential decode iterations.  ``draft_tokens`` is
+    # worker-side transient state (the draft child's candidates, attached
+    # by repro.spec.SpeculativeBackend after drafting) — it NEVER ships
+    # on the wire: each worker drafts deterministically from the same
+    # seed, so re-broadcasting the candidates would be redundant bytes.
+    speculative: bool = False
+    draft_tokens: Dict[int, List[int]] = dataclasses.field(
+        default_factory=dict, compare=False)
     _raw: Optional[bytes] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -281,6 +313,8 @@ class StepPlan:
                 payload["decode_steps"] = self.decode_steps
                 if self.eos_tokens:
                     payload["eos_tokens"] = self.eos_tokens
+                if self.speculative:
+                    payload["speculative"] = True
             self._raw = json.dumps(payload).encode()
         return self._raw
 
@@ -307,7 +341,8 @@ class StepPlan:
                                  for k, v in d.get("decode_steps",
                                                    {}).items()},
                    eos_tokens={int(k): v
-                               for k, v in d.get("eos_tokens", {}).items()})
+                               for k, v in d.get("eos_tokens", {}).items()},
+                   speculative=d.get("speculative", False))
 
     @property
     def payload_bytes(self) -> int:
@@ -331,6 +366,7 @@ class StepPlan:
                 + 8 * len(self.decode_tier_swaps)
                 + (30 + 12 * len(self.decode_steps)
                    + 12 * len(self.eos_tokens)
+                   + (20 if self.speculative else 0)
                    if self.num_steps > 1 else 0))
 
 
@@ -961,12 +997,19 @@ class Scheduler:
             self._dropped_while_swapped.clear()
 
         # 3b. multi-step dispatch (docs/multi_step.md): when this plan is
-        # pure steady decode — every running request decodes, nothing is
-        # queued, swapped, restoring, or in flight on the copy engine —
-        # extend it into a k-step macro-plan.  Must run before step 4 so
-        # the shipped block tables include the pre-reserved growth.
-        if cfg.max_steps_per_dispatch > 1 and self._macro_eligible(plan):
-            self._extend_macro(plan)
+        # steady decode — every running request is covered by this plan
+        # and nothing is queued, swapped, restoring, or in flight on the
+        # copy engine — extend it into a k-step macro-plan, or (taking
+        # precedence, docs/spec_decode.md) a speculative verify plan.
+        # Must run before step 4 so the shipped block tables include the
+        # pre-reserved growth.
+        if ((cfg.speculative_k > 0 or cfg.max_steps_per_dispatch > 1)
+                and self._macro_eligible(plan)):
+            if cfg.speculative_k > 0:
+                self._extend_macro(plan, k_max=cfg.speculative_k + 1,
+                                   speculative=True)
+            else:
+                self._extend_macro(plan)
 
         # 4. attach the per-request block tables + input ids the workers
         # need — the part of the payload that grows with the batch.  Under
@@ -1002,9 +1045,19 @@ class Scheduler:
         that would want the next (k-1) scheduling decisions, no
         in-flight copy-engine transfer whose epoch could need servicing
         mid-macro, and no drop notices (which must ship exactly once on
-        a plan the workers inspect step by step)."""
-        if (plan.prefill or plan.swap_outs or plan.restores
+        a plan the workers inspect step by step).
+
+        ``cfg.per_tier_macros`` relaxes exactly one requirement: prefill
+        chunks may ride the plan, and PREFILLING requests count as
+        covered when their chunk is in it — the decode tier runs its k
+        steps while the prefill tier chews the chunk (split-phase
+        overlap, docs/backends.md).  A running request that got NO work
+        this step still blocks extension: it is waiting on the very next
+        scheduling decision."""
+        if (plan.swap_outs or plan.restores
                 or plan.preempted or not plan.decode):
+            return False
+        if plan.prefill and not self.cfg.per_tier_macros:
             return False
         if self.waiting or self.swapped or self.restoring:
             return False
@@ -1012,22 +1065,29 @@ class Scheduler:
             return False
         if self.copies is not None and self.copies.in_flight:
             return False
-        if len(plan.decode) != len(self.running):
-            return False
-        return all(r.state == RequestState.DECODING for r in self.running)
+        covered = set(plan.decode)
+        covered.update(rid for rid, _, _ in plan.prefill)
+        return all(r.req_id in covered for r in self.running)
 
-    def _extend_macro(self, plan: StepPlan) -> None:
+    def _extend_macro(self, plan: StepPlan, k_max: Optional[int] = None,
+                      speculative: bool = False) -> None:
         """Turn a steady-decode plan into a k-step macro-plan: reserve KV
-        growth for up to ``max_steps_per_dispatch`` decode iterations per
-        request (shrinking k until the whole reservation fits — macro
-        extension NEVER preempts), record per-request inner-step budgets
-        capped at the remaining decode length, and advance ``step_id``
-        past the inner steps so copy-engine epochs stay sub-step ids."""
+        growth for up to ``k_max`` (default ``max_steps_per_dispatch``)
+        decode iterations per request (shrinking k until the whole
+        reservation fits — macro extension NEVER preempts), record
+        per-request inner-step budgets capped at the remaining decode
+        length, and advance ``step_id`` past the inner steps so
+        copy-engine epochs stay sub-step ids.
+
+        ``speculative=True`` marks the result a verify plan
+        (docs/spec_decode.md): same reservation and budgets — a verify
+        pass may emit up to its full budget b = 1 + k drafts — but the
+        workers run ONE batched scoring step instead of b iterations."""
         by_id = {r.req_id: r for r in self.running}
         reqs = [by_id[rid] for rid in plan.decode]
         rem = {r.req_id: max(r.max_new_tokens - len(r.generated), 1)
                for r in reqs}
-        k = min(self.cfg.max_steps_per_dispatch, max(rem.values()))
+        k = min(k_max or self.cfg.max_steps_per_dispatch, max(rem.values()))
         while k > 1:
             need = sum(self._blocks_needed(r, min(k, rem[r.req_id]) - 1)
                        for r in reqs)
@@ -1042,6 +1102,7 @@ class Scheduler:
                 ok = self._alloc_slots(req, extra)
                 assert ok, "macro reservation was sized to fit"
         plan.num_steps = k
+        plan.speculative = speculative
         plan.decode_steps = {r.req_id: min(k, rem[r.req_id]) for r in reqs}
         plan.eos_tokens = {r.req_id: r.eos_token for r in reqs
                            if r.eos_token is not None}
@@ -1100,6 +1161,24 @@ class Scheduler:
                 if hit_eos or len(req.generated) >= req.max_new_tokens:
                     req.t_done = now
                     done.append(req)
+            # per-tier macros may carry prefill chunks: account them
+            # exactly like the single-step path (first token iff the
+            # chunk completed the prompt)
+            for rid, start, n in plan.prefill:
+                req = by_id.get(rid)
+                if req is None:
+                    continue
+                self._register_computed(req, start + n)
+                if (req.state == RequestState.DECODING
+                        and not req.t_first_token):
+                    tok = tokens.get(rid, 0)
+                    req.generated.append(tok)
+                    req.t_first_token = now
+                    if (len(req.generated) >= req.max_new_tokens
+                            or (req.eos_token is not None
+                                and tok == req.eos_token)):
+                        req.t_done = now
+                        done.append(req)
             for req in done:
                 self._finish(req)
             return done

@@ -62,6 +62,13 @@ class ServingParams:
     # (defaults to the prefill device's swap bandwidth when <= 0).
     decode_device: Optional[DeviceModel] = None
     t_handoff_block: float = 0.0
+    # Speculative decode (docs/spec_decode.md): active when
+    # ``scheduler.speculative_k > 0``.  The draft runs on this device
+    # model (typically ``device.cpu_tier(...)`` — the idle-CPU tier);
+    # ``spec_accept_rate`` is the modeled fraction of drafts the verify
+    # step accepts, the crossover knob benchmarks/spec_decode.py sweeps.
+    draft_device: Optional[DeviceModel] = None
+    spec_accept_rate: float = 0.8
 
 
 @dataclasses.dataclass
@@ -101,6 +108,17 @@ class ServingModel:
                 t_submit_per_copy=params.device.t_submit_per_copy)
         else:
             self.backend = EmulatedBackend(params.device, sleep=False)
+        if params.scheduler.speculative_k > 0:
+            # draft on the CPU tier, verify on whatever the target is —
+            # step_cost serializes the two, synthesize_result models the
+            # acceptance rate for complete_step
+            from repro.spec import SpeculativeBackend
+            draft_dev = (params.draft_device
+                         if params.draft_device is not None
+                         else params.device.cpu_tier())
+            self.backend = SpeculativeBackend(
+                EmulatedBackend(draft_dev, sleep=False), self.backend,
+                accept_rate=params.spec_accept_rate)
         self.requests: List[Request] = []
         self.tok_queue: List[Request] = []
         self.tok_ev = self.sim.event("tok-queue")
@@ -224,8 +242,13 @@ class ServingModel:
             t0 = self.sim.now
             yield ("spin", done)
             self.barrier_waits.append(self.sim.now - t0)
+            # speculative plans complete with a synthesized acceptance-
+            # rate result (repro.spec); everything else keeps the
+            # full-budget default (result=None)
+            synth = getattr(self.backend, "synthesize_result", None)
+            res = synth(plan) if synth is not None else None
             for _ in range(self._fusion_rounds(plan)):
-                for req in self.sched.complete_step(plan, self.sim.now):
+                for req in self.sched.complete_step(plan, self.sim.now, res):
                     ev = self.done_events.get(req.req_id)
                     if ev is not None:
                         self.sim.fire(ev)
@@ -373,6 +396,33 @@ def with_multi_step(params: ServingParams, *, k: int) -> ServingParams:
     per-step baseline, ``params`` itself."""
     sched = dataclasses.replace(params.scheduler, max_steps_per_dispatch=k)
     return dataclasses.replace(params, scheduler=sched)
+
+
+def with_speculative(params: ServingParams, *, k: int,
+                     accept_rate: float = 0.8,
+                     draft_slowdown: float = 8.0,
+                     kv_dtype: str = "float32") -> ServingParams:
+    """Speculative-decode variant of ``params`` (docs/spec_decode.md):
+    the scheduler emits verify plans scoring up to ``k`` CPU-drafted
+    candidates per request in one batched step, the draft tier is the
+    device's CPU sibling slowed by ``draft_slowdown``, and the verify
+    step accepts ``accept_rate`` of the drafts on average — the two axes
+    benchmarks/spec_decode.py sweeps for the crossover.  ``kv_dtype=
+    "int8"`` additionally halves every KV byte the decode tier's cost
+    model charges (swap copies + the KV-bandwidth share of decode).
+    The non-speculative baseline is ``params`` itself."""
+    sched = dataclasses.replace(params.scheduler, speculative_k=k)
+    device, decode_device = params.device, params.decode_device
+    if decode_device is not None:
+        decode_device = decode_device.with_kv_dtype(kv_dtype)
+    else:
+        device = device.with_kv_dtype(kv_dtype)
+    return dataclasses.replace(
+        params, scheduler=sched, device=device,
+        decode_device=decode_device,
+        draft_device=params.device.cpu_tier(
+            decode_slowdown=draft_slowdown),
+        spec_accept_rate=accept_rate)
 
 
 def with_hybrid_decode(params: ServingParams, *,
