@@ -3,9 +3,17 @@
 The parser/CDF tooling is real (runs on any salloc CSV export); the input
 here is the synthetic dataset matched to the paper's published percentiles
 (DESIGN.md §9) since the original logs are private.
+
+The ``fleet`` section closes the loop the paper's cluster study opens:
+the allocation-ratio CDF says most serving jobs run CPU-starved, and the
+simulated-fleet TTFT CDF (``sim.serving.FleetModel``, 2 replicas,
+affinity routing) shows what that starvation costs end-to-end — the
+1-core-per-replica distribution against the 8-core one, same workload,
+same fleet.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from pathlib import Path
 
@@ -39,12 +47,45 @@ def summarize(kind: str) -> dict:
     return out
 
 
-def run(write: bool = True) -> dict:
+def fleet_ttft_cdf(fast: bool = False) -> dict:
+    """Simulated-fleet TTFT CDF: starved (1-core) vs provisioned (8-core)
+    replica allocations, same prefix-heavy workload, affinity routing."""
+    from repro.sim.serving import (fleet_open_prefix_workload,
+                                   llama8b_tp4_params)
+    duration = 15.0 if fast else 30.0
+    out = {}
+    for n_cores in (1, 8):
+        p = llama8b_tp4_params(n_cores=n_cores,
+                               kv_capacity_tokens=1280 * 64)
+        p = dataclasses.replace(
+            p, timeout=10.0,
+            scheduler=dataclasses.replace(p.scheduler,
+                                          max_tokens_per_step=2048))
+        res = fleet_open_prefix_workload(
+            p, n_replicas=2, routing="affinity", n_streams=17,
+            rps=8.0, duration=duration, prompt_tokens=8192,
+            max_new_tokens=16)
+        reqs = res.unique_requests()
+        tt = sorted(r.ttft if r.t_first_token else p.timeout
+                    for r in reqs)
+        out[f"{n_cores}_cores_per_replica"] = {
+            "n": len(tt),
+            "P25": round(tt[int(0.25 * (len(tt) - 1))], 3),
+            "P50": round(tt[len(tt) // 2], 3),
+            "P75": round(tt[int(0.75 * (len(tt) - 1))], 3),
+            "P95": round(tt[int(0.95 * (len(tt) - 1))], 3),
+            "timeouts": sum(1 for r in reqs if not r.t_first_token),
+        }
+    return out
+
+
+def run(fast: bool = False, write: bool = True) -> dict:
     out = {"instructional": summarize("instructional"),
            "research": summarize("research"),
            "paper_targets": {
                "instructional_P50": "1-2", "instructional_P25": "<=2",
-               "H100_P25": 0.25, "research_frac_below_8": "~0.6"}}
+               "H100_P25": 0.25, "research_frac_below_8": "~0.6"},
+           "fleet": fleet_ttft_cdf(fast)}
     if write:
         ARTIFACTS.mkdir(parents=True, exist_ok=True)
         (ARTIFACTS / "fig34_cluster_cdf.json").write_text(
@@ -52,8 +93,8 @@ def run(write: bool = True) -> dict:
     return out
 
 
-def main() -> None:
-    out = run()
+def main(fast: bool = False) -> None:
+    out = run(fast=fast)
     for kind in ("instructional", "research"):
         s = out[kind]
         print(f"-- {kind} cluster (synthetic, paper-matched) --")
@@ -62,6 +103,11 @@ def main() -> None:
                   f"P75={vals['P75']} below8={vals['frac_below_8']}")
     print(f"H100 gpu-hour share: "
           f"{out['instructional']['h100_gpu_hour_share']}")
+    print("-- simulated fleet TTFT CDF (2 replicas, affinity) --")
+    for alloc, vals in out["fleet"].items():
+        print(f"{alloc}: P25={vals['P25']} P50={vals['P50']} "
+              f"P75={vals['P75']} P95={vals['P95']} "
+              f"timeouts={vals['timeouts']}/{vals['n']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,190 @@
+"""Fleet routing sweep: replicas x cores-per-replica x routing policy.
+
+The paper's cluster study (Figs. 3-4) shows CPU-starved allocations
+timing out under load that adequately provisioned ones absorb.  This
+sweep restates that argument at fleet scale: on CPU-starved replicas,
+**where a request lands** matters as much as how many cores each replica
+has.  A prefix-heavy open-loop workload (repeat users re-sending a large
+shared prompt at a fixed fleet rate) runs through
+``sim.serving.FleetModel`` under three routing policies:
+
+* ``round-robin`` — blind alternation.  With more streams than one
+  replica's KV pool holds, strict cycling is the LRU-adversarial access
+  pattern: every revisit misses, every miss re-prefills the full prompt
+  in chunked steps, and the extra control-plane work lands on an already
+  starved 1-core engine until the queue diverges past the timeout.
+* ``p2c`` — pressure-aware but cache-blind: queue/KV-weighted
+  power-of-two-choices avoids the divergence cliff but still pays most
+  of the cross-replica re-prefill tax.
+* ``affinity`` — bloom-probe routing over
+  ``Scheduler.pressure_stats()`` prefix summaries pins each stream to
+  the replica already holding its blocks; prefills collapse to cache
+  hits and the starved control plane only carries decode steps.
+
+Headline: on 1-core replicas affinity eliminates the timeout cliff that
+round-robin hits at the same offered rate (0.4 timeout rate, ~15x mean
+TTFT among survivors), and its 1-core median TTFT matches round-robin's
+on replicas with twice the cores — cache-aware placement recovers about
+what a doubling of the per-replica CPU allocation buys (the paper's
+"fix the CPU side before buying more hardware" argument, applied to the
+router).
+
+Each cell also reports the ``FleetAutoscaler`` action computed from the
+run's own CPU-starvation signals (saturation + timeout rate).
+
+  PYTHONPATH=src python -m benchmarks.fleet_routing [--fast]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.fleet import FleetAutoscaler, ReplicaSignals
+from repro.sim.serving import (FleetResult, fleet_open_prefix_workload,
+                               llama8b_tp4_params)
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+POLICIES = ("round-robin", "p2c", "affinity")
+
+# Calibrated regime (see docs/fleet.md): 17 repeat streams re-sending an
+# 8192-token prompt (128 KV blocks + decode block), fleet rate 4 req/s
+# per replica.  A 1280-block pool holds ~9 streams — an affinity share
+# for 2 replicas, nowhere near the full set — and 17 is odd so
+# round-robin's replica alternation never aliases onto stream identity.
+# max_tokens_per_step=2048 (one prefill chunk) keeps a miss's 4 chunked
+# prefill steps from batch-amortizing with its neighbours', which is
+# exactly the per-step control-plane cost the paper measures.
+N_STREAMS = 17
+PROMPT_TOKENS = 8192
+MAX_NEW_TOKENS = 16
+KV_BLOCKS_PER_REPLICA = 1280
+RPS_PER_REPLICA = 4.0
+TIMEOUT = 10.0
+
+
+def _params(n_cores: int):
+    p = llama8b_tp4_params(
+        n_cores=n_cores,
+        kv_capacity_tokens=KV_BLOCKS_PER_REPLICA * 64)
+    sched = dataclasses.replace(p.scheduler, max_tokens_per_step=2048)
+    return dataclasses.replace(p, timeout=TIMEOUT, scheduler=sched)
+
+
+def run_cell(policy: str, n_cores: int, *, n_replicas: int,
+             duration: float) -> dict:
+    res: FleetResult = fleet_open_prefix_workload(
+        _params(n_cores), n_replicas=n_replicas, routing=policy,
+        n_streams=N_STREAMS, rps=RPS_PER_REPLICA * n_replicas,
+        duration=duration, prompt_tokens=PROMPT_TOKENS,
+        max_new_tokens=MAX_NEW_TOKENS)
+    reqs = res.unique_requests()
+    n_timeout = sum(1 for r in reqs
+                    if not r.t_first_token or r.ttft >= TIMEOUT)
+    ok = sorted(r.ttft for r in reqs
+                if r.t_first_token and r.ttft < TIMEOUT)
+    cell = {
+        "policy": policy, "n_replicas": n_replicas,
+        "cores_per_replica": n_cores,
+        "n_requests": len(reqs),
+        "timeouts": n_timeout,
+        "timeout_rate": round(n_timeout / max(1, len(reqs)), 3),
+        "ttft_p50": round(ok[len(ok) // 2], 3) if ok else None,
+        "ttft_p95": (round(ok[int(0.95 * (len(ok) - 1))], 3)
+                     if ok else None),
+        "ttft_mean": round(sum(ok) / len(ok), 3) if ok else None,
+        "total_steps": res.sched_costs,
+        "affinity_hits": res.router.get("n_affinity_hits", 0),
+        "diversions": res.router.get("n_pressure_diversions", 0),
+        "saturation_s": round(res.saturation_s, 1),
+    }
+    # the autoscaler consuming this cell's own starvation metrics
+    scaler = FleetAutoscaler(n_replicas)
+    sigs = [ReplicaSignals(
+                cpu_saturation=min(1.0, r.saturation_s
+                                   / max(1e-9, r.sim_time)),
+                timeout_rate=(sum(1 for q in r.unique_requests()
+                                  if not q.t_first_token
+                                  or q.ttft >= TIMEOUT)
+                              / max(1, len(r.unique_requests()))))
+            for r in res.per_replica]
+    rec = None
+    for _ in range(scaler.cfg.window):
+        rec = scaler.observe(sigs)
+    cell["autoscale"] = rec.action
+    return cell
+
+
+def run(fast: bool = False, write: bool = True) -> dict:
+    if fast:
+        core_axis, replica_axis, duration = [1, 8], [2], 20.0
+    else:
+        core_axis, replica_axis, duration = [1, 2, 8], [2, 4], 40.0
+    cells: List[dict] = []
+    print("policy,replicas,cores/replica,requests,timeouts,timeout_rate,"
+          "ttft_p50,ttft_p95,ttft_mean,steps,affinity_hits,autoscale")
+    for n_replicas in replica_axis:
+        cores = core_axis if n_replicas == replica_axis[0] else [1]
+        for n_cores in cores:
+            for policy in POLICIES:
+                c = run_cell(policy, n_cores, n_replicas=n_replicas,
+                             duration=duration)
+                cells.append(c)
+                print(f"{c['policy']},{c['n_replicas']},"
+                      f"{c['cores_per_replica']},{c['n_requests']},"
+                      f"{c['timeouts']},{c['timeout_rate']},"
+                      f"{c['ttft_p50']},{c['ttft_p95']},{c['ttft_mean']},"
+                      f"{c['total_steps']},{c['affinity_hits']},"
+                      f"{c['autoscale']}")
+
+    def cell(policy: str, cores: int) -> Optional[dict]:
+        return next((c for c in cells if c["policy"] == policy
+                     and c["cores_per_replica"] == cores
+                     and c["n_replicas"] == replica_axis[0]), None)
+
+    starved_aff = cell("affinity", core_axis[0])
+    starved_rr = cell("round-robin", core_axis[0])
+    rich_rr = cell("round-robin", core_axis[-1])
+    headline = {
+        "affinity_starved": starved_aff, "rr_starved": starved_rr,
+        "rr_provisioned": rich_rr,
+    }
+    if starved_aff and starved_rr and starved_aff["ttft_mean"] \
+            and starved_rr["ttft_mean"]:
+        headline["ttft_mean_speedup_vs_rr"] = round(
+            starved_rr["ttft_mean"] / starved_aff["ttft_mean"], 2)
+        headline["timeout_rate_rr"] = starved_rr["timeout_rate"]
+        headline["timeout_rate_affinity"] = starved_aff["timeout_rate"]
+        print(f"\nheadline: {core_axis[0]}-core replicas at "
+              f"{RPS_PER_REPLICA} req/s/replica — affinity: mean TTFT "
+              f"{starved_aff['ttft_mean']}s, timeout rate "
+              f"{starved_aff['timeout_rate']}; round-robin: "
+              f"{starved_rr['ttft_mean']}s (survivors), timeout rate "
+              f"{starved_rr['timeout_rate']} "
+              f"({headline['ttft_mean_speedup_vs_rr']}x mean-TTFT gap); "
+              f"round-robin needs {core_axis[-1]} cores/replica to reach "
+              f"{rich_rr['ttft_mean']}s")
+    out = {"config": {
+               "n_streams": N_STREAMS, "prompt_tokens": PROMPT_TOKENS,
+               "max_new_tokens": MAX_NEW_TOKENS,
+               "kv_blocks_per_replica": KV_BLOCKS_PER_REPLICA,
+               "rps_per_replica": RPS_PER_REPLICA, "timeout": TIMEOUT,
+               "duration": duration, "core_axis": core_axis,
+               "replica_axis": replica_axis},
+           "cells": cells, "headline": headline}
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "fleet_routing.json").write_text(
+            json.dumps(out, indent=1))
+    return out
+
+
+def main(fast: bool = False) -> None:
+    run(fast=fast or "--fast" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -61,8 +61,9 @@ def main() -> None:
     payload_scaling.main()
 
     from benchmarks import fig34_cluster_cdf
-    _section("fig3-4: cluster allocation CDFs (synthetic, paper-matched)")
-    fig34_cluster_cdf.main()
+    _section("fig3-4: cluster allocation CDFs (synthetic, paper-matched) "
+             "+ simulated-fleet TTFT CDF")
+    fig34_cluster_cdf.main(fast=fast)
 
     from benchmarks import fusion_ablation
     _section("beyond-paper: fused multi-step decode (persistent-kernel "
@@ -83,6 +84,11 @@ def main() -> None:
     _section("beyond-paper: split-phase CPU-decode offload crossover "
              "(hybrid vs unified)")
     hybrid_split.main(fast=fast)
+
+    from benchmarks import fleet_routing
+    _section("beyond-paper: fleet routing (replicas x cores x policy — "
+             "cache affinity vs extra cores on starved replicas)")
+    fleet_routing.main(fast=fast)
 
     from benchmarks import roofline_report
     _section("roofline table (from dry-run artifacts)")

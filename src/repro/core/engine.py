@@ -66,6 +66,11 @@ class EngineConfig:
     # async lookahead scheduling (beyond-paper mitigation, §V-B takeaway):
     # overlap scheduling/broadcast of step k+1 with device execution of k.
     async_sched: bool = False
+    # publish a Scheduler.pressure_stats() snapshot to the owner every k
+    # scheduled steps (0 = off).  A fleet frontend polls these for
+    # pressure-feedback routing (docs/fleet.md); snapshots ride a bounded
+    # queue and are dropped, never blocked on, when the owner lags.
+    pressure_every: int = 0
 
     def resolved_ring_slot_bytes(self) -> int:
         if self.ring_slot_bytes:
@@ -94,7 +99,7 @@ class EngineConfig:
 
 
 def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
-                 board_name: str, stop_ev) -> None:
+                 board_name: str, stop_ev, pressure_q=None) -> None:
     """EngineCore process main loop."""
     ring = ShmBroadcastQueue.attach(ring_name)
     writer = ring.writer()
@@ -164,6 +169,12 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
             raw = plan.encode()
             payload_sizes.append(len(raw))
             writer.enqueue(raw, yield_every=cfg.yield_every)
+            if (pressure_q is not None and cfg.pressure_every > 0
+                    and sched.step_id % cfg.pressure_every == 0):
+                try:
+                    pressure_q.put_nowait(sched.pressure_stats())
+                except queue.Full:
+                    pass    # stale snapshot beats a blocked control plane
         if cfg.async_sched:
             # lookahead pipeline: wait for the PREVIOUS step while the
             # workers already received (and execute) the current one.
@@ -245,6 +256,8 @@ class ServingSystem:
         self.in_q = _CTX.Queue()
         self.out_q = _CTX.Queue()
         self.stats_q = _CTX.Queue()
+        self.pressure_q = _CTX.Queue(maxsize=64)
+        self._last_pressure = None
         self.stop_ev = _CTX.Event()
         self.procs: List[mp.Process] = []
         self.pool: Optional[TokenizerPool] = None
@@ -260,7 +273,8 @@ class ServingSystem:
         eng = _CTX.Process(
             target=_engine_core,
             args=(self.cfg, self.in_q, self.out_q, self.stats_q,
-                  self.ring.name, self.board.name, self.stop_ev),
+                  self.ring.name, self.board.name, self.stop_ev,
+                  self.pressure_q),
             daemon=True, name="engine-core")
         eng.start()
         self.procs.append(eng)
@@ -311,6 +325,17 @@ class ServingSystem:
         else:
             tokenize_and_enqueue()
         return rid
+
+    def pressure_stats(self):
+        """Latest engine-published pressure snapshot (or None before the
+        first publish / with ``pressure_every == 0``).  Drains the queue —
+        only the freshest snapshot matters to a router."""
+        while True:
+            try:
+                self._last_pressure = self.pressure_q.get_nowait()
+            except queue.Empty:
+                break
+        return self._last_pressure
 
     def collect(self, n: int, timeout: float = 300.0) -> Dict[int, dict]:
         deadline = time.monotonic() + timeout

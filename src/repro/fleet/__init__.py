@@ -1,0 +1,19 @@
+"""Fleet serving: N engine replicas behind an affinity/pressure router.
+
+See docs/fleet.md.  The router and autoscaler are pure decision logic
+(reusable by both the live engine and the DES); ``frontend`` wires them
+to real ``ServingSystem`` replicas, and ``repro.sim.serving.FleetModel``
+wires them to simulated ones.
+"""
+from repro.fleet.autoscale import (AutoscalerConfig, FleetAutoscaler,
+                                   Recommendation, ReplicaSignals)
+from repro.fleet.frontend import FleetServingFrontend, leading_word_keys
+from repro.fleet.router import (POLICIES, FleetRouter, PrefixSummary,
+                                RouterConfig, leading_block_keys)
+
+__all__ = [
+    "AutoscalerConfig", "FleetAutoscaler", "Recommendation",
+    "ReplicaSignals", "FleetServingFrontend", "leading_word_keys",
+    "POLICIES", "FleetRouter", "PrefixSummary", "RouterConfig",
+    "leading_block_keys",
+]

@@ -118,6 +118,17 @@ def main() -> None:
     ap.add_argument("--devmodel", default=None,
                     help="JSON devmodel calibration emitted by "
                          "repro.launch.dryrun --emit-devmodel")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="fleet mode (docs/fleet.md): run N full engine "
+                         "replicas behind a FleetRouter; --cores is the "
+                         "whole-fleet budget")
+    ap.add_argument("--routing", default="affinity",
+                    choices=("affinity", "round-robin", "p2c"),
+                    help="fleet request routing policy (docs/fleet.md)")
+    ap.add_argument("--sessions", type=int, default=4,
+                    help="fleet mode: distinct session prefixes in the "
+                         "workload (each request leads with its session's "
+                         "prefix — what affinity routing keys on)")
     args = ap.parse_args()
 
     if (args.backend == "hybrid"
@@ -179,6 +190,7 @@ def main() -> None:
         kv_dtype=args.kv_dtype,
         ring_slot_bytes=args.ring_slot_bytes,
         yield_every=args.yield_every, async_sched=args.async_sched,
+        pressure_every=(4 if args.replicas > 1 else 0),
     )
     backend_desc = args.backend
     if args.backend == "hybrid":
@@ -192,6 +204,10 @@ def main() -> None:
           f"multi_step={args.multi_step} "
           f"speculative_k={args.speculative_k} kv_dtype={args.kv_dtype}")
     text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
+
+    if args.replicas > 1:
+        _serve_fleet(args, cfg, text)
+        return
 
     sys_ = ServingSystem(cfg).start()
     with CpuSampler(0.05) as sampler:
@@ -235,6 +251,81 @@ def main() -> None:
         print(f"[serve] broadcast payload p50={st.median(pb)/1024:.2f}KiB "
               f"max={max(pb)/1024:.2f}KiB total={sum(pb)/1024:.0f}KiB")
     print(f"[serve] cpu saturation(>=95%)={sampler.saturation_seconds():.1f}s")
+
+
+def _serve_fleet(args, cfg: EngineConfig, base_text: str) -> None:
+    """Fleet mode: N engine replicas behind a FleetRouter (docs/fleet.md).
+
+    The workload leads each request with a per-session word prefix, so the
+    affinity policy has real routing keys; round-robin/p2c ignore them."""
+    from repro.fleet import (FleetAutoscaler, FleetServingFrontend,
+                             ReplicaSignals)
+    fleet = FleetServingFrontend([cfg] * args.replicas,
+                                 routing=args.routing).start()
+    with CpuSampler(0.05) as sampler:
+        t0 = time.perf_counter()
+        for i in range(args.requests):
+            target = t0 + i / args.rps
+            now = time.perf_counter()
+            if target > now:
+                time.sleep(target - now)
+            sid = i % max(1, args.sessions)
+            text = (f"session {sid} shared context preamble " * 8
+                    + base_text)
+            fleet.submit(text, max_new_tokens=args.max_new,
+                         is_victim=(i % 5 == 0), session=sid)
+        results = fleet.collect(args.requests, timeout=120.0)
+    pressures = fleet.pressure()
+    router = fleet.router.stats()
+    all_stats = fleet.shutdown()
+
+    finished = [r for r in results.values()
+                if not r.get("timed_out") and r.get("t_first_token")]
+    ttfts = sorted(r["t_first_token"] - r["t_arrival"] for r in finished)
+    n_dead = len(results) - len(finished)
+    print(f"[fleet] completed {len(finished)}/{args.requests}"
+          + (f" (timed out/rejected: {n_dead})" if n_dead else ""))
+    if ttfts:
+        print(f"[fleet] TTFT p50={st.median(ttfts)*1e3:.1f}ms "
+              f"p95={ttfts[int(0.95 * (len(ttfts) - 1))]*1e3:.1f}ms "
+              f"max={ttfts[-1]*1e3:.1f}ms")
+    per_replica = [0] * args.replicas
+    for r in results.values():
+        if "replica" in r:
+            per_replica[r["replica"]] += 1
+    print(f"[fleet] routing={args.routing} per-replica requests="
+          f"{per_replica} affinity_hits={router['n_affinity_hits']} "
+          f"session_hits={router['n_session_hits']} "
+          f"diversions={router['n_pressure_diversions']}")
+    for idx, p in enumerate(pressures):
+        if p is not None:
+            print(f"[fleet] replica{idx} pressure: free_blocks="
+                  f"{p.free_blocks}/{p.total_blocks} queue={p.queue_depth} "
+                  f"preempted={p.n_preempted} timed_out={p.n_timed_out}")
+    # autoscaling signal from the fleet-level CPU-starvation metrics
+    sat = sampler.saturation_seconds()
+    wall = max(1e-9, time.perf_counter() - t0)
+    n_res = max(1, len(results))
+    sig = ReplicaSignals(
+        cpu_saturation=min(1.0, sat / wall),
+        timeout_rate=n_dead / n_res,
+        preempt_rate=(sum(p.n_preempted for p in pressures
+                          if p is not None) / n_res),
+        kv_pressure=max((p.kv_pressure for p in pressures
+                         if p is not None), default=0.0))
+    scaler = FleetAutoscaler(args.replicas)
+    rec = scaler.observe([sig] * args.replicas)
+    for _ in range(scaler.cfg.window - 1):
+        rec = scaler.observe([sig] * args.replicas)
+    print(f"[fleet] cpu saturation(>=95%)={sat:.1f}s of {wall:.1f}s; "
+          f"autoscaler: {rec.action} -> {rec.target} replicas "
+          f"({rec.reason})")
+    for idx, stats in enumerate(all_stats):
+        eng = next((s for s in stats if s["role"] == "engine"), None)
+        if eng and eng["sched_cost"]:
+            print(f"[fleet] replica{idx} sched p50="
+                  f"{st.median(eng['sched_cost'])*1e6:.0f}us "
+                  f"steps={len(eng['sched_cost'])}")
 
 
 if __name__ == "__main__":

@@ -149,6 +149,14 @@ class BlockManager:
     def cached_blocks(self) -> int:
         return len(self._cache)
 
+    def cache_keys(self) -> List[int]:
+        """Chain keys of every resident prefix-cache block (locked or
+        evictable).  Fleet routing folds these into a per-replica bloom
+        summary (``repro.fleet.PrefixSummary``); the set is authoritative at
+        call time but a router-side copy decays as LRU eviction reclaims
+        blocks — consumers must treat hits as probabilistic."""
+        return list(self._cache.keys())
+
     def ref_count(self, block_id: int) -> int:
         return self._ref[block_id]
 

@@ -410,6 +410,47 @@ class BlockTableTracker:
         return plan
 
 
+@dataclasses.dataclass(frozen=True)
+class PressureStats:
+    """One replica's admission/KV-pressure snapshot for fleet routing.
+
+    Built by ``Scheduler.pressure_stats()`` from BlockManager/queue ground
+    truth at call time — every field is re-derived, nothing is cached, so a
+    router polling between steps can never see double-counted pressure.
+    ``n_preempted``/``n_timed_out`` are cumulative counters (rates come from
+    differencing two snapshots); ``cpu_saturation`` is whatever the caller
+    last reported via ``note_cpu_saturation`` (the scheduler itself cannot
+    observe wall-clock CPU).  ``prefix_summary`` is an optional
+    ``repro.fleet.PrefixSummary`` bloom over the resident prefix-cache
+    chain keys — false positives allowed, false negatives never (at
+    snapshot time).
+    """
+    step_id: int
+    free_blocks: int
+    total_blocks: int
+    queue_depth: int          # tokenized requests waiting for admission
+    n_running: int
+    n_swapped: int
+    n_restoring: int
+    in_flight_copies: int     # copy-engine transfers not yet retired
+    kv_used_tokens: int
+    cached_blocks: int        # prefix-cache entries resident (incl. evictable)
+    n_preempted: int          # cumulative evictions (recompute + swap)
+    n_timed_out: int          # cumulative client timeouts + up-front rejects
+    cpu_saturation: float = 0.0
+    prefix_summary: Optional[object] = None
+
+    @property
+    def kv_pressure(self) -> float:
+        """Fraction of the device pool not allocatable right now."""
+        return 1.0 - self.free_blocks / max(1, self.total_blocks)
+
+    @property
+    def occupancy(self) -> int:
+        """Requests holding or awaiting KV state on this replica."""
+        return self.n_running + self.n_swapped + self.n_restoring
+
+
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
         self.cfg = cfg
@@ -447,6 +488,13 @@ class Scheduler:
         self._n_restores = 0
         self._n_re_evicts = 0
         self._overload_tick = 0
+        # cumulative pressure counters (fleet routing / autoscaling signals)
+        self.n_preempted_total = 0
+        self.n_timed_out_total = 0
+        # last externally reported CPU saturation (0..1); the engine/DES
+        # owns the measurement, the scheduler just carries it into
+        # ``pressure_stats`` snapshots
+        self.cpu_saturation = 0.0
         self.step_id = 0
         swap = None
         if cfg.num_swap_blocks > 0:
@@ -467,6 +515,7 @@ class Scheduler:
             # same terminal state as a timeout) instead of parking it at the
             # queue head where it would head-of-line-block all admission
             req.state = RequestState.TIMED_OUT
+            self.n_timed_out_total += 1
             return
         if self.cfg.enable_prefix_cache:
             # probe only (no locks while waiting); the hit is re-resolved —
@@ -620,6 +669,7 @@ class Scheduler:
             # round trip(s) retired no work — overload signal for the
             # adaptive policy (``_swap_overloaded``)
             self._n_re_evicts += 1
+        self.n_preempted_total += 1
         if self._choose_preemption(victim, plan) == "swap":
             self._preempt_swap(victim, plan)
         else:
@@ -820,7 +870,46 @@ class Scheduler:
                 req.state = RequestState.TIMED_OUT
                 self.restoring.remove(req)
                 dead.append(req)
+        self.n_timed_out_total += len(dead)
         return dead
+
+    # -- pressure snapshot (fleet routing) -------------------------------------
+
+    def note_cpu_saturation(self, frac: float) -> None:
+        """Record the caller-measured CPU saturation (0..1) so it rides the
+        next ``pressure_stats`` snapshot.  The live engine reports its
+        sampler's recent saturation share; the DES reports instantaneous
+        runnable/cores."""
+        self.cpu_saturation = min(1.0, max(0.0, float(frac)))
+
+    def pressure_stats(self, *,
+                       with_prefix_summary: bool = False) -> PressureStats:
+        """Snapshot this replica's admission/KV pressure for a fleet router.
+
+        Every field is derived from the BlockManager and queues at call
+        time.  With ``with_prefix_summary`` the snapshot carries a bloom
+        summary of resident prefix-cache chain keys
+        (``repro.fleet.PrefixSummary``) for cache-affinity routing."""
+        summary = None
+        if with_prefix_summary and self.cfg.enable_prefix_cache:
+            from repro.fleet.router import PrefixSummary
+            summary = PrefixSummary.from_keys(self.blocks.cache_keys())
+        return PressureStats(
+            step_id=self.step_id,
+            free_blocks=self.blocks.free_blocks,
+            total_blocks=self.cfg.num_kv_blocks,
+            queue_depth=len(self.waiting),
+            n_running=len(self.running),
+            n_swapped=len(self.swapped),
+            n_restoring=len(self.restoring),
+            in_flight_copies=(self.copies.in_flight
+                              if self.copies is not None else 0),
+            kv_used_tokens=self.kv_used,
+            cached_blocks=self.blocks.cached_blocks,
+            n_preempted=self.n_preempted_total,
+            n_timed_out=self.n_timed_out_total,
+            cpu_saturation=self.cpu_saturation,
+            prefix_summary=summary)
 
     # -- the per-step decision -------------------------------------------------
 

@@ -175,6 +175,24 @@ class Sim:
 
             t_next = min(t_cpu, t_sleep, t_timer)
             if t_next is math.inf or t_next > until:
+                # Pausing mid-segment: drain the linear stretch [now, until]
+                # before returning so a later run(until=...) resumes with the
+                # exact same arithmetic an uninterrupted run would have used —
+                # otherwise every in-progress cpu burst is silently stretched
+                # by the pause (FleetModel advances replicas in lockstep
+                # slices and depends on this).
+                if until != math.inf:
+                    dt = until - self.now
+                    if dt > 0 and rate > 0:
+                        for p in runnable:
+                            drained = dt * rate
+                            p.cpu_used += drained
+                            if p.phase == "cpu":
+                                p.work_left -= drained
+                        if runnable:
+                            self.util_trace.append(
+                                (self.now,
+                                 min(1.0, len(runnable) / self.n_cores)))
                 self.now = min(until, max(self.now, until))
                 return
             dt = t_next - self.now

@@ -16,6 +16,8 @@ idle-but-polling workers steal cycles from the tokenizer and vice versa.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import math
 from typing import Dict, List, Optional, Tuple
 
@@ -71,6 +73,27 @@ class ServingParams:
     spec_accept_rate: float = 0.8
 
 
+def _dedup_by_rid(reqs: List[Request]) -> List[Request]:
+    """One record per request id, arrival order preserved.
+
+    A fleet-level retry re-dispatches a timed-out request to a second
+    replica under the SAME id, so an aggregated result can hold two
+    records for one logical request.  The completed record (first token
+    produced) wins; otherwise the first record stands — one logical
+    request contributes exactly one timeout, never one per replica that
+    touched it."""
+    best: Dict[int, Request] = {}
+    order: List[int] = []
+    for r in reqs:
+        cur = best.get(r.req_id)
+        if cur is None:
+            best[r.req_id] = r
+            order.append(r.req_id)
+        elif r.t_first_token and not cur.t_first_token:
+            best[r.req_id] = r
+    return [best[k] for k in order]
+
+
 @dataclasses.dataclass
 class WorkloadResult:
     requests: List[Request]
@@ -80,8 +103,13 @@ class WorkloadResult:
     sim_time: float
     saturation_s: float
 
+    def unique_requests(self) -> List[Request]:
+        """Requests de-duplicated by id (see ``_dedup_by_rid``) — the only
+        valid population for fleet-aggregated latency/timeout metrics."""
+        return _dedup_by_rid(self.requests)
+
     def victims(self) -> List[Request]:
-        return [r for r in self.requests if r.is_victim]
+        return [r for r in self.unique_requests() if r.is_victim]
 
     def victim_ttfts(self) -> List[Optional[float]]:
         out = []
@@ -168,6 +196,12 @@ class ServingModel:
                       is_victim=is_victim)
         base = stream << 24
         req.prompt_tokens = list(range(base, base + n_tokens))
+        return self.inject_request(req)
+
+    def inject_request(self, req: Request) -> Request:
+        """Inject a pre-built request at the current sim time (the fleet
+        router dispatches — and on retry re-dispatches a same-id clone —
+        through this)."""
         req.t_arrival = self.sim.now
         self.requests.append(req)
         self.tok_queue.append(req)
@@ -291,8 +325,16 @@ class ServingModel:
         return self.backend.step_cost(plan) * self._fusion_rounds(plan)
 
     # -- run ---------------------------------------------------------------------
+    # run() = start() + advance(horizon) + finalize().  The split exists for
+    # FleetModel, which advances N replicas in lockstep time slices to each
+    # routing decision point; Sim.run is pause-exact (repro.sim.core), so a
+    # sliced advance produces the same trajectory an uninterrupted run would.
 
-    def run(self, horizon: float = 400.0) -> WorkloadResult:
+    def start(self) -> "ServingModel":
+        """Spawn the pipeline procs (idempotent)."""
+        if getattr(self, "_procs_started", False):
+            return self
+        self._procs_started = True
         # Rayon pool: requests are serviced one at a time (GIL holds the
         # Python side), each fanning out across the whole thread pool.
         self.sim.spawn("tok-dispatch", self._tokenizer_dispatcher())
@@ -301,7 +343,14 @@ class ServingModel:
             self.sim.spawn(f"worker{r}", self._worker_proc(r))
         for i, gen in enumerate(self.extra_procs):
             self.sim.spawn(f"extra{i}", gen)
-        self.sim.run(until=horizon)
+        return self
+
+    def advance(self, until: float) -> None:
+        """Advance the replica's private clock to ``until``."""
+        self.start()
+        self.sim.run(until=until)
+
+    def finalize(self) -> WorkloadResult:
         # mark timeouts (including ones the engine never got to expire)
         for req in self.requests:
             if not req.t_first_token:
@@ -316,6 +365,10 @@ class ServingModel:
             sim_time=self.sim.now,
             saturation_s=self.sim.saturation_seconds(),
         )
+
+    def run(self, horizon: float = 400.0) -> WorkloadResult:
+        self.advance(horizon)
+        return self.finalize()
 
 
 def victim_stats(res: WorkloadResult, timeout: float) -> dict:
@@ -333,6 +386,320 @@ def victim_stats(res: WorkloadResult, timeout: float) -> dict:
         "max_completed_ttft": round(max(done), 2) if done else None,
         "timeouts": sum(1 for t in tt if t is None or t >= timeout),
     }
+
+
+@dataclasses.dataclass
+class FleetResult(WorkloadResult):
+    """Fleet-aggregated WorkloadResult: same metrics over the union of the
+    replicas' requests (``unique_requests`` de-duplicates retried ids),
+    plus the per-replica results and router counters."""
+    per_replica: List[WorkloadResult] = dataclasses.field(
+        default_factory=list)
+    router: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+
+def merge_results(results: List[WorkloadResult],
+                  router: Optional[Dict[str, object]] = None) -> FleetResult:
+    """Aggregate per-replica results into one fleet view.  ``sim_time`` is
+    the shared clock (max); ``saturation_s`` sums CPU-saturated seconds
+    across replicas (each has a private core pool)."""
+    return FleetResult(
+        requests=[r for res in results for r in res.requests],
+        dequeue_waits=[w for res in results for w in res.dequeue_waits],
+        barrier_waits=[w for res in results for w in res.barrier_waits],
+        sched_costs=sum(res.sched_costs for res in results),
+        sim_time=max((res.sim_time for res in results), default=0.0),
+        saturation_s=sum(res.saturation_s for res in results),
+        per_replica=list(results),
+        router=dict(router or {}),
+    )
+
+
+_TERMINAL = (RequestState.FINISHED, RequestState.TIMED_OUT)
+
+
+class FleetModel:
+    """N ``ServingModel`` replicas behind a ``repro.fleet.FleetRouter``,
+    advanced in lockstep on a shared fleet clock.
+
+    Each replica keeps its PRIVATE ``Sim`` (its own core pool — fleet
+    replicas do not share CPUs), and the fleet loop advances every replica
+    to each routing decision point: open-loop arrival times
+    (``add_request``), closed-loop session turns (``add_session``), and a
+    ``route_quantum`` polling tick while sessions or retries are in
+    flight.  ``Sim.run`` is pause-exact, so slicing a replica's timeline
+    at fleet boundaries reproduces the trajectory an uninterrupted run
+    would have taken; under ``round-robin`` with no sessions/retries the
+    loop additionally advances ONLY the target replica per arrival, which
+    makes each replica's event arithmetic bit-identical to an
+    independently fed ``ServingModel`` (pinned by
+    tests/test_fleet_conformance.py).
+
+    Routing itself costs zero simulated time — the router's real CPU cost
+    belongs to the live frontend, not the replica control planes under
+    study.  Router decisions read authoritative
+    ``Scheduler.pressure_stats`` snapshots (with bloom prefix summaries)
+    plus instantaneous DES CPU saturation (runnable/cores).
+
+    ``max_retries > 0`` re-dispatches a timed-out request to another
+    replica under the SAME request id — the aggregation-side dedup
+    (``WorkloadResult.unique_requests``) is what keeps such a request
+    from counting as one timeout per replica it visited.
+    """
+
+    def __init__(self, params: ServingParams, n_replicas: int = 2,
+                 routing: str = "affinity", route_quantum: float = 0.25,
+                 max_retries: int = 0, router_cfg=None):
+        from repro.fleet.router import FleetRouter, RouterConfig
+        self.p = params
+        self.n = n_replicas
+        self.replicas = [ServingModel(params) for _ in range(n_replicas)]
+        if router_cfg is None:
+            router_cfg = RouterConfig(
+                policy=routing, block_size=params.scheduler.block_size)
+        elif router_cfg.policy != routing:
+            router_cfg = dataclasses.replace(router_cfg, policy=routing)
+        self.router = FleetRouter(
+            n_replicas, router_cfg,
+            stats_fns=[self._stats_fn(i) for i in range(n_replicas)])
+        self.route_quantum = route_quantum
+        self.max_retries = max_retries
+        self._arrivals: List[Tuple[float, int, dict]] = []   # heap
+        self._seq = itertools.count()
+        self._sessions: List[dict] = []
+        # [req, replica idx, retries left, books closed] per dispatch —
+        # "closed" guards the rid's router record: a retried request's
+        # clone reuses the id, so the original record must be released
+        # exactly once and never after the clone is outstanding
+        self._dispatched: List[list] = []
+        self.n_retries = 0
+        self._now = 0.0
+
+    def _stats_fn(self, i: int):
+        # windowed mean utilization since the previous stats call, read
+        # from the sim's piecewise-constant util_trace (the same trace
+        # Sim.saturation_seconds integrates).  An instantaneous
+        # runnable/cores sample is too noisy for hysteresis: it flaps
+        # between 0 and 1 depending on which event boundary the route
+        # decision lands on, and every flap breaks affinity stickiness.
+        state = {"t": 0.0, "k": 0}
+        def fn():
+            m = self.replicas[i]
+            tr = m.sim.util_trace
+            now, t0, k = m.sim.now, state["t"], state["k"]
+            busy = 0.0
+            while k + 1 < len(tr):
+                (ta, u), tb = tr[k], tr[k + 1][0]
+                lo = max(ta, t0)
+                if tb > lo:
+                    busy += (tb - lo) * u
+                k += 1
+            if tr:     # tail segment: last recorded frac holds until now
+                ta, u = tr[-1]
+                lo = max(ta, t0)
+                if now > lo:
+                    busy += (now - lo) * u
+            sat = busy / (now - t0) if now > t0 else \
+                (tr[-1][1] if tr else 0.0)
+            state["t"], state["k"] = now, max(0, len(tr) - 1)
+            m.sched.note_cpu_saturation(sat)
+            return m.sched.pressure_stats(with_prefix_summary=True)
+        return fn
+
+    # -- workload construction ----------------------------------------------
+
+    def add_request(self, t_arrival: float, n_tokens: int,
+                    max_new_tokens: int = 8, is_victim: bool = False,
+                    stream: int = 0, session=None) -> None:
+        """Open-loop arrival, routed at ``t_arrival`` on the fleet clock."""
+        heapq.heappush(self._arrivals, (t_arrival, next(self._seq), dict(
+            n_tokens=n_tokens, max_new_tokens=max_new_tokens,
+            is_victim=is_victim, stream=stream, session=session)))
+
+    def add_session(self, t_start: float, n_requests: int, n_tokens: int,
+                    max_new_tokens: int = 8, think: float = 0.5,
+                    stream: Optional[int] = None, is_victim: bool = False,
+                    grow_tokens: int = 0) -> int:
+        """Closed-loop session: ``n_requests`` turns, each issued ``think``
+        seconds after the previous turn completes (or times out).  All
+        turns share the session's token stream, so turn j's prompt is an
+        exact prefix-cache hit for turn j+1 (plus ``grow_tokens`` fresh
+        tokens per turn) — the prefix-heavy workload affinity routing is
+        for."""
+        sid = len(self._sessions)
+        self._sessions.append({
+            "key": f"session-{sid}",
+            "stream": stream if stream is not None else 4096 + sid,
+            "n_left": n_requests, "n_sent": 0, "next_t": t_start,
+            "think": think, "n_tokens": n_tokens,
+            "max_new": max_new_tokens, "is_victim": is_victim,
+            "grow": grow_tokens, "cur": None})
+        return sid
+
+    # -- fleet loop ----------------------------------------------------------
+
+    def _needs_poll(self) -> bool:
+        if any(s["cur"] is not None for s in self._sessions):
+            return True
+        return self.max_retries > 0 and bool(self.router.outstanding)
+
+    def _dispatch(self, spec: dict, lazy: bool) -> Request:
+        base = spec["stream"] << 24
+        toks = list(range(base, base + spec["n_tokens"]))
+        idx = self.router.route(toks, session=spec.get("session"))
+        m = self.replicas[idx]
+        if lazy:
+            m.advance(self._now)
+        req = m.inject_now(spec["n_tokens"], spec["max_new_tokens"],
+                           is_victim=spec["is_victim"],
+                           stream=spec["stream"])
+        self.router.record_dispatch(req.req_id, idx)
+        self._dispatched.append([req, idx, self.max_retries, False])
+        return req
+
+    def _poll(self, now: float) -> None:
+        # session turn completions -> schedule the next turn
+        for s in self._sessions:
+            req = s["cur"]
+            if req is not None and req.state in _TERMINAL:
+                t_done = req.t_done if req.t_done else now
+                s["next_t"] = t_done + s["think"]
+                s["cur"] = None
+        # fleet-level retry: a starved replica's timeout re-routes ONCE
+        # per remaining budget, never back to the same replica
+        if self.max_retries > 0:
+            for entry in list(self._dispatched):
+                req, idx, left, closed = entry
+                if (not closed and left > 0
+                        and req.state is RequestState.TIMED_OUT):
+                    entry[2], entry[3] = 0, True
+                    self.router.record_abort(req.req_id)
+                    clone = Request(text="",
+                                    max_new_tokens=req.max_new_tokens,
+                                    req_id=req.req_id,
+                                    is_victim=req.is_victim)
+                    clone.prompt_tokens = list(req.prompt_tokens)
+                    new_idx = self.router.route(clone.prompt_tokens,
+                                                exclude=(idx,))
+                    self.replicas[new_idx].advance(now)
+                    self.replicas[new_idx].inject_request(clone)
+                    self.router.record_dispatch(clone.req_id, new_idx)
+                    self._dispatched.append([clone, new_idx, left - 1,
+                                             False])
+                    self.n_retries += 1
+        # release router bookkeeping for terminal requests (exactly once
+        # per dispatch record — the closed flag, not the router, arbitrates
+        # between a retried id's original and clone records)
+        for entry in self._dispatched:
+            if not entry[3] and entry[0].state in _TERMINAL:
+                entry[3] = True
+                self.router.record_done(entry[0].req_id)
+
+    def run(self, horizon: float = 400.0) -> FleetResult:
+        for m in self.replicas:
+            m.start()
+        # round-robin reads no replica state, so only the target replica
+        # needs to be at the arrival time — everyone else keeps an
+        # uninterrupted event stream (the conformance guarantee);
+        # stats-driven policies must advance the whole fleet to every
+        # decision point so snapshots are simultaneous
+        lazy = (self.router.cfg.policy == "round-robin"
+                and not self._sessions and self.max_retries == 0)
+        self._now = 0.0
+        while self._now < horizon:
+            t_next = horizon
+            if self._arrivals:
+                t_next = min(t_next, self._arrivals[0][0])
+            for s in self._sessions:
+                if s["cur"] is None and s["n_left"] > 0:
+                    t_next = min(t_next, s["next_t"])
+            if self._needs_poll():
+                t_next = min(t_next, self._now + self.route_quantum)
+            t_next = min(max(t_next, self._now), horizon)
+            if not lazy:
+                for m in self.replicas:
+                    m.advance(t_next)
+            self._now = t_next
+            if self._now >= horizon:
+                break
+            if not lazy:
+                self._poll(self._now)
+            while self._arrivals and self._arrivals[0][0] <= self._now:
+                _, _, spec = heapq.heappop(self._arrivals)
+                self._dispatch(spec, lazy)
+            for s in self._sessions:
+                if (s["cur"] is None and s["n_left"] > 0
+                        and s["next_t"] <= self._now):
+                    spec = dict(n_tokens=(s["n_tokens"]
+                                          + s["n_sent"] * s["grow"]),
+                                max_new_tokens=s["max_new"],
+                                is_victim=s["is_victim"],
+                                stream=s["stream"], session=s["key"])
+                    s["cur"] = self._dispatch(spec, lazy)
+                    s["n_left"] -= 1
+                    s["n_sent"] += 1
+        for m in self.replicas:
+            m.advance(horizon)
+        results = [m.finalize() for m in self.replicas]
+        # close the books: everything is terminal at the horizon
+        for entry in self._dispatched:
+            if not entry[3]:
+                entry[3] = True
+                self.router.record_done(entry[0].req_id)
+        stats = self.router.stats()
+        stats["n_fleet_retries"] = self.n_retries
+        return merge_results(results, router=stats)
+
+
+def fleet_prefix_workload(params: ServingParams, *, n_replicas: int,
+                          routing: str, n_sessions: int,
+                          requests_per_session: int, prompt_tokens: int,
+                          think: float = 0.5, stagger: float = 0.25,
+                          max_new_tokens: int = 8,
+                          horizon: float = 400.0,
+                          route_quantum: float = 0.25,
+                          router_cfg=None) -> FleetResult:
+    """Prefix-heavy closed-loop fleet workload: ``n_sessions`` chat-style
+    sessions, each re-sending its (large) shared prefix every turn —
+    affinity routing keeps a session's blocks hot on one replica, while
+    blind policies re-prefill the prefix wherever the request lands."""
+    fleet = FleetModel(params, n_replicas=n_replicas, routing=routing,
+                       route_quantum=route_quantum, router_cfg=router_cfg)
+    for s in range(n_sessions):
+        fleet.add_session(t_start=s * stagger,
+                          n_requests=requests_per_session,
+                          n_tokens=prompt_tokens,
+                          max_new_tokens=max_new_tokens, think=think)
+    return fleet.run(horizon=horizon)
+
+
+def fleet_open_prefix_workload(params: ServingParams, *, n_replicas: int,
+                               routing: str, n_streams: int, rps: float,
+                               duration: float, prompt_tokens: int,
+                               max_new_tokens: int = 8,
+                               horizon: Optional[float] = None,
+                               route_quantum: float = 0.25,
+                               router_cfg=None) -> FleetResult:
+    """Prefix-heavy OPEN-loop fleet workload: arrivals at a fixed fleet
+    rate, cycling over ``n_streams`` repeat users (each re-sends its own
+    ``prompt_tokens``-token prompt, so every revisit is a full
+    prefix-cache hit on a replica that has served the stream before).
+
+    Unlike the closed-loop session workload, arrivals do not wait for
+    completions — when blind routing pushes a replica's service rate
+    below the offered rate, its queue (and TTFT) diverges, which is how
+    the paper's timeout cliff manifests at fleet scale."""
+    fleet = FleetModel(params, n_replicas=n_replicas, routing=routing,
+                       route_quantum=route_quantum, router_cfg=router_cfg)
+    n = int(duration * rps)
+    for i in range(n):
+        sid = i % n_streams
+        fleet.add_request(i / rps, prompt_tokens,
+                          max_new_tokens=max_new_tokens,
+                          stream=4096 + sid, session=f"stream-{sid}")
+    if horizon is None:
+        horizon = duration + 4 * params.timeout
+    return fleet.run(horizon=horizon)
 
 
 def llama8b_tp4_params(n_cores: int, tp: int = 4,

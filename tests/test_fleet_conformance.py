@@ -1,0 +1,104 @@
+"""Fleet/engine seam conformance: a routed fleet is the SAME system.
+
+Two exact-equality pins (test_backend_conformance.py style, but across
+the router seam instead of the backend seam):
+
+* ``FleetModel`` with one replica is metric-identical to a bare
+  ``ServingModel`` fed the same arrivals — routing through the fleet
+  layer may not perturb a single replica's trajectory by even a float
+  ulp.  Holds for every policy: with one replica, every policy is the
+  identity.
+* ``FleetModel`` with two round-robin replicas equals two independently
+  fed ``ServingModel``s (arrivals dealt alternately).  Round-robin reads
+  no replica state, so the fleet must not introduce extra sim-advance
+  boundaries on the non-target replica.
+
+Both lean on ``Sim.run`` pause-exactness (repro.sim.core): FleetModel
+advances replicas in time slices to each routing decision, and a sliced
+advance must reproduce an uninterrupted run's arithmetic bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.sim.serving import (FleetModel, ServingModel, ServingParams,
+                               llama8b_tp4_params)
+
+POLICIES = ("round-robin", "p2c", "affinity")
+
+
+def _params(n_cores: int = 2) -> ServingParams:
+    p = llama8b_tp4_params(n_cores=n_cores,
+                           kv_capacity_tokens=256 * 64)
+    return dataclasses.replace(p, timeout=20.0)
+
+
+# enough arrivals to cover prefill chunking, batching, decode overlap
+# and (last arrivals) queueing behind earlier work
+ARRIVALS = [(0.05 * i, 192 + 64 * (i % 5), 4 + (i % 3), i % 7)
+            for i in range(24)]
+HORIZON = 40.0
+
+
+def _metrics(res):
+    reqs = res.unique_requests()
+    return {
+        "ttfts": [r.t_first_token for r in reqs],
+        "dones": [r.t_done for r in reqs],
+        "states": [r.state for r in reqs],
+        "n_steps": res.sched_costs,
+        "barrier_waits": res.barrier_waits,
+        "dequeue_waits": res.dequeue_waits,
+        "saturation_s": res.saturation_s,
+    }
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_fleet_of_one_is_metric_identical_to_bare_model(policy):
+    bare = ServingModel(_params())
+    for t, n, mnt, stream in ARRIVALS:
+        bare.add_request(t, n, max_new_tokens=mnt, stream=stream)
+    ref = _metrics(bare.run(horizon=HORIZON))
+
+    fleet = FleetModel(_params(), n_replicas=1, routing=policy)
+    for t, n, mnt, stream in ARRIVALS:
+        fleet.add_request(t, n, max_new_tokens=mnt, stream=stream)
+    got = _metrics(fleet.run(horizon=HORIZON))
+
+    assert got == ref                      # exact, not approximate
+
+
+def test_two_replica_round_robin_equals_independent_replicas():
+    refs = []
+    for replica in range(2):
+        m = ServingModel(_params())
+        for i, (t, n, mnt, stream) in enumerate(ARRIVALS):
+            if i % 2 == replica:
+                m.add_request(t, n, max_new_tokens=mnt, stream=stream)
+        refs.append(_metrics(m.run(horizon=HORIZON)))
+
+    fleet = FleetModel(_params(), n_replicas=2, routing="round-robin")
+    for t, n, mnt, stream in ARRIVALS:
+        fleet.add_request(t, n, max_new_tokens=mnt, stream=stream)
+    fleet_res = fleet.run(horizon=HORIZON)
+    got = [_metrics(r) for r in fleet_res.per_replica]
+
+    assert got == refs                     # exact, per replica
+    # and the merged aggregate is the concatenation, not a re-derivation
+    assert fleet_res.sched_costs == sum(r["n_steps"] for r in refs)
+    assert fleet_res.saturation_s == sum(r["saturation_s"] for r in refs)
+
+
+def test_fleet_requests_all_accounted_once():
+    """No request lost or duplicated across the fleet seam: every
+    arrival appears exactly once in the aggregated result, and the
+    router's books are empty after the run."""
+    fleet = FleetModel(_params(), n_replicas=2, routing="affinity")
+    for t, n, mnt, stream in ARRIVALS:
+        fleet.add_request(t, n, max_new_tokens=mnt, stream=stream)
+    res = fleet.run(horizon=HORIZON)
+    assert len(res.unique_requests()) == len(ARRIVALS)
+    assert fleet.router.outstanding == {}
+    assert fleet.router.stats()["inflight"] == [0, 0]
