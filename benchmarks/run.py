@@ -85,6 +85,12 @@ def main() -> None:
              "(hybrid vs unified)")
     hybrid_split.main(fast=fast)
 
+    from benchmarks import speed_bump
+    _section("speed-bump: per-site slowdown injection -> throughput "
+             "sensitivity ranking per core budget (the paper's "
+             "instrument, docs/profiling.md)")
+    speed_bump.main(fast=fast)
+
     from benchmarks import fleet_routing
     _section("beyond-paper: fleet routing (replicas x cores x policy — "
              "cache affinity vs extra cores on starved replicas)")

@@ -53,6 +53,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro import profiling
+
 SWAP_OUT, RESTORE, HANDOFF = "swap_out", "restore", "handoff"
 
 
@@ -105,6 +107,7 @@ class CopyEngine:
 
     def submit(self, step_id: int, kind: str, req_id: int, n_blocks: int,
                on_complete: Optional[Callable[[], None]] = None) -> Transfer:
+        profiling.hit("copy_submit", step=step_id, req=req_id)
         t = Transfer(step_id, kind, req_id, n_blocks, on_complete)
         self._inflight.append(t)
         self.n_submitted += 1

@@ -24,8 +24,10 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
+from repro import profiling
 from repro.core.devmodel import DeviceModel
 from repro.core.shm_broadcast import CompletionBoard, ShmBroadcastQueue
+from repro.profiling import ProfilingConfig
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import (BlockTableTracker, Scheduler,
                                      SchedulerConfig, StepPlan)
@@ -71,6 +73,10 @@ class EngineConfig:
     # pressure-feedback routing (docs/fleet.md); snapshots ride a bounded
     # queue and are dropped, never blocked on, when the owner lags.
     pressure_every: int = 0
+    # speed-bump injection + trace timeline (docs/profiling.md): inert by
+    # default — every process takes the uninstrumented fast path unless
+    # this (or REPRO_INJECT/REPRO_TRACE) asks for a profiler
+    profiling: ProfilingConfig = ProfilingConfig()
 
     def resolved_ring_slot_bytes(self) -> int:
         if self.ring_slot_bytes:
@@ -101,6 +107,7 @@ class EngineConfig:
 def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
                  board_name: str, stop_ev, pressure_q=None) -> None:
     """EngineCore process main loop."""
+    prof = profiling.activate(cfg.profiling, role="engine")
     ring = ShmBroadcastQueue.attach(ring_name)
     writer = ring.writer()
     board = CompletionBoard.attach(board_name, cfg.tp_degree)
@@ -151,8 +158,15 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
                 emit(req, timed_out=True)    # rejected: can never fit KV
 
     def finish_step(plan: StepPlan) -> None:
-        barrier = board.wait_all(plan.step_id,
-                                 yield_every=cfg.yield_every)
+        if prof is None:
+            barrier = board.wait_all(plan.step_id,
+                                     yield_every=cfg.yield_every)
+        else:
+            # trace-only span ("barrier" is not an injection site): shows
+            # the engine idling on the workers in the timeline
+            with prof.span("barrier", step=plan.step_id):
+                barrier = board.wait_all(plan.step_id,
+                                         yield_every=cfg.yield_every)
         barrier_waits.append(barrier.wall_s)
         now = time.perf_counter()
         for req in sched.complete_step(plan, now):
@@ -163,12 +177,25 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
         drain_inputs()
         expire_requests()
         t0 = time.perf_counter()
-        plan = sched.schedule()
+        if prof is None:
+            plan = sched.schedule()
+        else:
+            # the span also charges the "scheduler" injection delay, and
+            # block_alloc/copy_submit hits land inside schedule() itself
+            with prof.span("scheduler", step=sched.step_id):
+                plan = sched.schedule()
         sched_costs.append(time.perf_counter() - t0)
         if plan is not None:
-            raw = plan.encode()
-            payload_sizes.append(len(raw))
-            writer.enqueue(raw, yield_every=cfg.yield_every)
+            if prof is None:
+                raw = plan.encode()
+                payload_sizes.append(len(raw))
+                writer.enqueue(raw, yield_every=cfg.yield_every)
+            else:
+                with prof.span("shm_encode", step=plan.step_id):
+                    raw = plan.encode()
+                payload_sizes.append(len(raw))
+                with prof.span("shm_publish", step=plan.step_id):
+                    writer.enqueue(raw, yield_every=cfg.yield_every)
             if (pressure_q is not None and cfg.pressure_every > 0
                     and sched.step_id % cfg.pressure_every == 0):
                 try:
@@ -200,6 +227,7 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
         "sched_cost": sched_costs,
         "barrier_wall": barrier_waits,
         "payload_bytes": payload_sizes,
+        "trace_events": prof.events if prof is not None else [],
     })
     ring.close()
     board.close()
@@ -214,6 +242,7 @@ def _worker(cfg: EngineConfig, idx: int, ring_name: str, board_name: str,
     for real (constructed post-fork, so jax state is never inherited)."""
     from repro.backend import make_backend   # deferred: avoids core<->backend
                                              # import cycle at package load
+    prof = profiling.activate(cfg.profiling, role=f"worker{idx}")
     ring = ShmBroadcastQueue.attach(ring_name)
     reader = ring.reader(idx)
     board = CompletionBoard.attach(board_name, cfg.tp_degree)
@@ -231,13 +260,22 @@ def _worker(cfg: EngineConfig, idx: int, ring_name: str, board_name: str,
         plan = StepPlan.decode_bytes(payload)
         if plan.step_id < 0:
             break
-        tables.expand(plan)
-        backend.execute(plan)             # accelerator executes
+        if prof is None:
+            tables.expand(plan)
+            backend.execute(plan)         # accelerator executes
+        else:
+            with prof.span("dispatch", step=plan.step_id):
+                tables.expand(plan)
+            # trace-only span ("device" is not an injection site): the
+            # cover set critical_path_summary subtracts from exposed time
+            with prof.span("device", step=plan.step_id):
+                backend.execute(plan)
         board.mark(idx, plan.step_id)
     stats_q.put({
         "role": f"worker{idx}",
         "dequeue_wall": [s.wall_s for s in reader.stats],
         "dequeue_spins": [s.spins for s in reader.stats],
+        "trace_events": prof.events if prof is not None else [],
     })
     ring.close()
     board.close()
@@ -266,10 +304,15 @@ class ServingSystem:
         self._next_id = 0
         self._lock = threading.Lock()
         self._encode_futs: List["cf.Future"] = []
+        self._prof = None
 
     # -- lifecycle -----------------------------------------------------------
 
     def start(self) -> "ServingSystem":
+        # activate AFTER process creation below would also work (children
+        # install their own profiler post-fork regardless), but doing it
+        # first keeps the owner's t0 earlier than any child event
+        self._prof = profiling.activate(self.cfg.profiling, role="api")
         eng = _CTX.Process(
             target=_engine_core,
             args=(self.cfg, self.in_q, self.out_q, self.stats_q,
@@ -297,10 +340,17 @@ class ServingSystem:
             rid = self._next_id
             self._next_id += 1
         t_arrival = time.perf_counter()
+        prof = self._prof
 
         def tokenize_and_enqueue() -> List[int]:
             t_tok0 = time.perf_counter()
-            toks = self.tokenizer.encode(text)
+            if prof is None:
+                toks = self.tokenizer.encode(text)
+            else:
+                # span runs on a pool thread; list.append is atomic under
+                # the GIL, so the collection stays lock-free
+                with prof.span("tokenize", req=rid):
+                    toks = self.tokenizer.encode(text)
             t_tok1 = time.perf_counter()
             self.in_q.put({
                 "req_id": rid, "tokens": toks,
@@ -374,4 +424,10 @@ class ServingSystem:
         for fut in futs:
             if fut.done() and fut.exception() is not None:
                 raise fut.exception()
+        if self._prof is not None:
+            # appended last so every pool-thread tokenize span has landed
+            self.stats.append({"role": "api",
+                               "trace_events": list(self._prof.events)})
+            self._prof = None
+            profiling.deactivate()
         return self.stats

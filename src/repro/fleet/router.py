@@ -176,6 +176,9 @@ class FleetRouter:
         self._inflight = [0] * n_replicas
         # hysteresis state: replicas currently considered drowning
         self._drowning: Set[int] = set()
+        # replicas taken out of rotation by drain() (scale-down): route()
+        # never picks one while any alternative exists
+        self._drained: Set[int] = set()
         # session -> replica stickiness
         self._sessions: Dict[object, int] = {}
         # optimistic summaries of prefixes dispatched per replica
@@ -275,9 +278,14 @@ class FleetRouter:
         ``exclude`` removes replicas from consideration (fleet-level retry
         after a timeout must not go back to the replica that starved)."""
         self.n_routed += 1
-        excluded = set(exclude)
+        excluded = set(exclude) | self._drained
         if len(excluded) >= self.n:
-            excluded = set()
+            # every replica excluded: drop the drain exclusions first
+            # (routing somewhere beats dropping the request), then the
+            # caller's if even that leaves nothing
+            excluded = set(exclude)
+            if len(excluded) >= self.n:
+                excluded = set()
 
         if self.cfg.policy == "round-robin":
             for _ in range(self.n):
@@ -348,13 +356,23 @@ class FleetRouter:
     record_abort = record_done
 
     def drain(self, idx: int) -> List[int]:
-        """Replica going away: forget everything outstanding on it and
-        return the orphaned rids (the caller re-routes or fails them)."""
+        """Replica going away: take it out of the rotation (``route``
+        never picks a drained replica while any alternative exists, and
+        session stickiness to it breaks), forget everything outstanding
+        on it, and return the orphaned rids (the caller re-routes or
+        fails them — or lets them finish in place: a later
+        ``record_done`` for an orphaned rid is a no-op, not a leak)."""
+        self._drained.add(idx)
         rids = [r for r, i in self._outstanding.items() if i == idx]
         for r in rids:
             del self._outstanding[r]
         self._inflight[idx] = 0
         return rids
+
+    def undrain(self, idx: int) -> None:
+        """Return a drained replica to the rotation (scale-up reusing
+        the slot)."""
+        self._drained.discard(idx)
 
     @property
     def outstanding(self) -> Dict[int, int]:
@@ -368,5 +386,6 @@ class FleetRouter:
             "n_session_hits": self.n_session_hits,
             "n_pressure_diversions": self.n_pressure_diversions,
             "drowning": sorted(self._drowning),
+            "drained": sorted(self._drained),
             "inflight": list(self._inflight),
         }

@@ -18,6 +18,9 @@ import time
 from repro.core.cpuutil import CpuSampler, cpu_budget
 from repro.core.devmodel import DeviceModel
 from repro.core.engine import EngineConfig, ServingSystem
+from repro.profiling import (ProfilingConfig, critical_path_summary,
+                             events_from_stats, export_chrome_trace,
+                             format_summary)
 from repro.serving.scheduler import SchedulerConfig
 
 
@@ -129,6 +132,17 @@ def main() -> None:
                     help="fleet mode: distinct session prefixes in the "
                          "workload (each request leads with its session's "
                          "prefix — what affinity routing keys on)")
+    ap.add_argument("--inject", default="",
+                    help="speed-bump slowdown injection "
+                         "(docs/profiling.md): 'site=delay_us,...' with "
+                         "sites from repro.profiling.SITES ('*' = all); "
+                         "each named control-plane module sleeps that "
+                         "long per call")
+    ap.add_argument("--trace-out", default="",
+                    help="write the merged engine/worker/api span "
+                         "timeline as Chrome trace_event JSON to this "
+                         "path (open in chrome://tracing or Perfetto) "
+                         "and print the critical-path summary")
     args = ap.parse_args()
 
     if (args.backend == "hybrid"
@@ -191,6 +205,8 @@ def main() -> None:
         ring_slot_bytes=args.ring_slot_bytes,
         yield_every=args.yield_every, async_sched=args.async_sched,
         pressure_every=(4 if args.replicas > 1 else 0),
+        profiling=ProfilingConfig(inject=args.inject,
+                                  trace=bool(args.trace_out)),
     )
     backend_desc = args.backend
     if args.backend == "hybrid":
@@ -221,6 +237,13 @@ def main() -> None:
                         is_victim=(i % 5 == 0))
         results = sys_.collect(args.requests, timeout=120.0)
     stats = sys_.shutdown()
+
+    if args.trace_out:
+        pairs = events_from_stats(stats)
+        n = export_chrome_trace(pairs, args.trace_out)
+        print(f"[trace] wrote {n} events to {args.trace_out} "
+              f"(chrome://tracing / ui.perfetto.dev)")
+        print(format_summary(critical_path_summary(pairs)))
 
     finished = [r for r in results.values() if not r.get("timed_out")]
     ttfts = sorted(r["t_first_token"] - r["t_arrival"] for r in finished)
@@ -278,6 +301,15 @@ def _serve_fleet(args, cfg: EngineConfig, base_text: str) -> None:
     pressures = fleet.pressure()
     router = fleet.router.stats()
     all_stats = fleet.shutdown()
+
+    if args.trace_out:
+        flat = [dict(s, role=f"r{idx}/{s['role']}")
+                for idx, stats in enumerate(all_stats) for s in stats]
+        pairs = events_from_stats(flat)
+        n = export_chrome_trace(pairs, args.trace_out)
+        print(f"[trace] wrote {n} events ({args.replicas} replicas) to "
+              f"{args.trace_out}")
+        print(format_summary(critical_path_summary(pairs)))
 
     finished = [r for r in results.values()
                 if not r.get("timed_out") and r.get("t_first_token")]

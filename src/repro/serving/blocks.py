@@ -59,6 +59,8 @@ from __future__ import annotations
 import collections
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import profiling
+
 
 class HostSwapSpace:
     """Bounded host-memory block pool — the swap tier for preempted KV.
@@ -226,6 +228,7 @@ class BlockManager:
         """Hand out ``n`` blocks (refcount 1 each), evicting LRU cached
         blocks if the free list runs dry.  All-or-nothing: returns None
         when fewer than ``n`` blocks are reclaimable (caller preempts)."""
+        profiling.hit("block_alloc", n=n)
         if n > self.free_blocks:
             return None
         out = []

@@ -21,8 +21,10 @@ import itertools
 import math
 from typing import Dict, List, Optional, Tuple
 
+from repro import profiling
 from repro.backend.emulated import EmulatedBackend
 from repro.core.devmodel import DeviceModel
+from repro.profiling import Profiler, ProfilingConfig
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
 from repro.sim.core import Event, Sim
@@ -71,6 +73,12 @@ class ServingParams:
     # step accepts, the crossover knob benchmarks/spec_decode.py sweeps.
     draft_device: Optional[DeviceModel] = None
     spec_accept_rate: float = 0.8
+    # Speed-bump slowdown injection (docs/profiling.md): "site=delay_us"
+    # spec, same grammar as `serve --inject`.  The injected delays charge
+    # as extra ("cpu", s) work in the GPS model — deterministic, priced
+    # under the exact core budget being swept.  "" = no profiler at all;
+    # a spec whose delays are all 0 is bit-exact with "" (the oracle).
+    inject: str = ""
 
 
 def _dedup_by_rid(reqs: List[Request]) -> List[Request]:
@@ -147,6 +155,13 @@ class ServingModel:
             self.backend = SpeculativeBackend(
                 EmulatedBackend(draft_dev, sleep=False), self.backend,
                 accept_rate=params.spec_accept_rate)
+        # virtual-mode speed-bump profiler (docs/profiling.md): one per
+        # replica, delays accrue in prof.pending and the procs drain them
+        # as extra cpu work via _charge below
+        self.prof: Optional[Profiler] = (
+            Profiler(ProfilingConfig(inject=params.inject),
+                     role="sim", virtual=True)
+            if params.inject else None)
         self.requests: List[Request] = []
         self.tok_queue: List[Request] = []
         self.tok_ev = self.sim.event("tok-queue")
@@ -211,6 +226,26 @@ class ServingModel:
 
     # -- procs -------------------------------------------------------------------
 
+    def _charge(self, fn=None, *, sites=()):
+        """Run ``fn`` with this replica's virtual profiler installed (so
+        block_alloc/copy_submit hits inside the scheduler land on it),
+        charge the named ``sites`` once each, and return
+        ``(result, extra_cpu_seconds)``.  The caller yields
+        ``("cpu", extra)`` only when extra > 0 — with no profiler, or all
+        delays 0, the proc's event sequence is bit-exact with an
+        uninjected run."""
+        prof = self.prof
+        if prof is None:
+            return (fn() if fn is not None else None), 0.0
+        prev = profiling.install(prof)
+        try:
+            out = fn() if fn is not None else None
+        finally:
+            profiling.install(prev)
+        for s in sites:
+            prof.hit(s)
+        return out, prof.drain()
+
     def _tokenizer_dispatcher(self):
         """Models the Rayon pool: each encode fans out over ``pool_width``
         worker shards (HF tokenizers parallelize word-level within one
@@ -238,6 +273,9 @@ class ServingModel:
             for s in range(shards):
                 self.sim.spawn(f"tokshard", shard_proc())
             yield ("wait", join_ev)
+            _, extra = self._charge(sites=("tokenize",))
+            if extra > 0.0:
+                yield ("cpu", extra)
             req.t_tokenize_done = self.sim.now
             self.sched.add_request(req)
             ev, self.engine_ev = self.engine_ev, self.sim.event("engine-input")
@@ -256,21 +294,31 @@ class ServingModel:
         while not self._stopped:
             plan = None
             if self.sched.has_work:
-                for req in self.sched.expire(self.sim.now, p.timeout):
+                expired, extra0 = self._charge(
+                    lambda: self.sched.expire(self.sim.now, p.timeout))
+                for req in expired:
                     ev = self.done_events.get(req.req_id)
                     if ev is not None:
                         self.sim.fire(ev)
+                # cost + 0.0 == cost exactly, so the uninjected cost
+                # expression is bit-identical when nothing was charged
                 yield ("cpu", p.sched_cost_base
-                       + p.sched_cost_per_seq * len(self.sched.running))
-                plan = self.sched.schedule()
+                       + p.sched_cost_per_seq * len(self.sched.running)
+                       + extra0)
+                plan, extra = self._charge(self.sched.schedule,
+                                           sites=("scheduler",))
+                if extra > 0.0:
+                    yield ("cpu", extra)
             if plan is None:
                 yield ("wait", self.engine_ev)
                 continue
             self.n_steps += 1
             self._plans[self.n_steps] = plan
             msg, done = self._get_step_events(self.n_steps)
+            _, extra = self._charge(sites=("shm_encode", "shm_publish"))
             yield ("cpu", p.enqueue_cost
-                   + plan.approx_payload_bytes() * p.serialize_cost_per_byte)
+                   + plan.approx_payload_bytes() * p.serialize_cost_per_byte
+                   + extra)
             self.sim.fire(msg)
             # completion poll: busy-wait on the board (paper §V-B)
             t0 = self.sim.now
@@ -281,11 +329,20 @@ class ServingModel:
             # full-budget default (result=None)
             synth = getattr(self.backend, "synthesize_result", None)
             res = synth(plan) if synth is not None else None
+            extra_done = 0.0
             for _ in range(self._fusion_rounds(plan)):
-                for req in self.sched.complete_step(plan, self.sim.now, res):
+                completed, extra = self._charge(
+                    lambda: self.sched.complete_step(plan, self.sim.now,
+                                                     res))
+                extra_done += extra
+                for req in completed:
                     ev = self.done_events.get(req.req_id)
                     if ev is not None:
                         self.sim.fire(ev)
+            if extra_done > 0.0:
+                # block allocations during token append (and copy-engine
+                # retires) charged inside complete_step
+                yield ("cpu", extra_done)
 
     def _fusion_rounds(self, plan: Optional[StepPlan]) -> int:
         """Decode-only plans run ``decode_fusion`` tokens per dispatch
@@ -309,7 +366,8 @@ class ServingModel:
             t0 = self.sim.now
             yield ("spin", msg)                     # shm dequeue busy-wait
             self.dequeue_waits.append(self.sim.now - t0)
-            yield ("cpu", p.dequeue_cost + p.dispatch_cost)
+            _, extra = self._charge(sites=("dispatch",))
+            yield ("cpu", p.dequeue_cost + p.dispatch_cost + extra)
             self.dispatched[step] += 1
             if self.dispatched[step] == p.tp:       # last rank arms device
                 plan_t = self._plan_time(step)
@@ -472,6 +530,10 @@ class FleetModel:
         # clone reuses the id, so the original record must be released
         # exactly once and never after the clone is outstanding
         self._dispatched: List[list] = []
+        # scheduled replica drains: (fleet time, replica idx) heap, and a
+        # log of (t, idx, orphaned rids) for each executed drain
+        self._drains: List[Tuple[float, int]] = []
+        self.drain_log: List[Tuple[float, int, List[int]]] = []
         self.n_retries = 0
         self._now = 0.0
 
@@ -535,6 +597,14 @@ class FleetModel:
             "max_new": max_new_tokens, "is_victim": is_victim,
             "grow": grow_tokens, "cur": None})
         return sid
+
+    def drain_replica_at(self, t: float, idx: int) -> None:
+        """Schedule replica ``idx`` out of the rotation at fleet time
+        ``t`` (scale-down): from then on ``route`` sends new arrivals
+        elsewhere, while the replica keeps advancing so its in-flight
+        requests finish in place — their later ``record_done`` is a
+        None-safe no-op on the already-drained router books."""
+        heapq.heappush(self._drains, (t, idx))
 
     # -- fleet loop ----------------------------------------------------------
 
@@ -604,12 +674,15 @@ class FleetModel:
         # stats-driven policies must advance the whole fleet to every
         # decision point so snapshots are simultaneous
         lazy = (self.router.cfg.policy == "round-robin"
-                and not self._sessions and self.max_retries == 0)
+                and not self._sessions and self.max_retries == 0
+                and not self._drains)
         self._now = 0.0
         while self._now < horizon:
             t_next = horizon
             if self._arrivals:
                 t_next = min(t_next, self._arrivals[0][0])
+            if self._drains:
+                t_next = min(t_next, self._drains[0][0])
             for s in self._sessions:
                 if s["cur"] is None and s["n_left"] > 0:
                     t_next = min(t_next, s["next_t"])
@@ -622,6 +695,12 @@ class FleetModel:
             self._now = t_next
             if self._now >= horizon:
                 break
+            # drains fire BEFORE same-instant arrivals are routed, so a
+            # request arriving at the drain time already re-routes away
+            while self._drains and self._drains[0][0] <= self._now:
+                _, idx = heapq.heappop(self._drains)
+                orphans = self.router.drain(idx)
+                self.drain_log.append((self._now, idx, orphans))
             if not lazy:
                 self._poll(self._now)
             while self._arrivals and self._arrivals[0][0] <= self._now:

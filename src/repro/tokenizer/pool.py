@@ -14,6 +14,7 @@ import threading
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro import profiling
 from repro.tokenizer.bpe import BPETokenizer
 
 
@@ -31,15 +32,36 @@ class TokenizerPool:
 
     def _encode_one(self, text: str) -> List[int]:
         t0 = time.perf_counter()
-        ids = self.tokenizer.encode(text)
+        prof = profiling.active()
+        if prof is None:
+            ids = self.tokenizer.encode(text)
+        else:
+            with prof.span("tokenize"):
+                ids = self.tokenizer.encode(text)
         if self.measure:
             dt = time.perf_counter() - t0
             with self._lock:
                 self.latencies.append((t0, dt, len(ids)))
         return ids
 
+    def _decode_one(self, ids: Sequence[int]) -> str:
+        prof = profiling.active()
+        if prof is None:
+            return self.tokenizer.decode(list(ids))
+        with prof.span("detokenize"):
+            return self.tokenizer.decode(list(ids))
+
     def encode(self, text: str) -> List[int]:
         return self._encode_one(text)
+
+    def decode(self, ids: Sequence[int]) -> str:
+        """Detokenize on the caller's thread (response path)."""
+        return self._decode_one(ids)
+
+    def submit_decode(self, ids: Sequence[int]) -> "cf.Future[str]":
+        """Async detokenize — shares the encode threads, so response-path
+        detokenization contends for the same cores (paper §IV-B)."""
+        return self.submit(self._decode_one, ids)
 
     def encode_batch(self, texts: Sequence[str]) -> List[List[int]]:
         """Parallel batch encode (the Rayon-style fan-out)."""
