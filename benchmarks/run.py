@@ -96,6 +96,11 @@ def main() -> None:
              "cache affinity vs extra cores on starved replicas)")
     fleet_routing.main(fast=fast)
 
+    from benchmarks import slo_tiers
+    _section("beyond-paper: SLO tiers (mixed-class traffic, class-aware "
+             "vs class-blind scheduling per CPU budget)")
+    slo_tiers.main(fast=fast)
+
     from benchmarks import roofline_report
     _section("roofline table (from dry-run artifacts)")
     roofline_report.main()

@@ -1,0 +1,188 @@
+"""SLO tiers: mixed-class traffic under class-aware vs class-blind scheduling.
+
+Real fleets mix interactive chat with batch summarization.  The paper
+shows CPU starvation hits tail latency first — and it hits the requests
+with the tightest deadlines hardest: a 6k-token batch prompt's chunked
+prefill occupies the step budget an interactive request's 1-second TTFT
+deadline is racing against, and a class-blind FCFS queue makes the
+interactive request wait out every batch prefill admitted before it.
+
+This sweep serves the BYTE-IDENTICAL mixed workload (deterministic
+largest-remainder class assignment, same arrival times, same prompts)
+through two schedulers:
+
+* **blind** — today's arrival-order admission (``slo_aware=False``);
+  classes are tagged, measured, and ignored.
+* **aware** — ``slo_aware=True`` (docs/slo.md): waiting-queue admission
+  ordered by slack-to-TTFT-deadline (EDF), per-class prefill chunk caps
+  (batch chunks at 512 so a long prompt can't monopolize a step), rank-
+  aware preemption victims, and overload shedding of batch admissions
+  when interactive deadlines start missing.
+
+Axes: interactive share x CPU budget, aware vs blind per cell; per-class
+TTFT/TPOT attainment from ``WorkloadResult.slo_summary()``.  Headline
+(the regime the paper predicts): at 1 core the blind scheduler's
+interactive TTFT attainment collapses (~3%) while the aware scheduler
+holds ~90%+ — AT NO COST TO BATCH (same batch attainment, same
+timeouts), because interactive requests are small; reordering them first
+costs batch a step, not its SLO.  At 8 cores both schedulers attain
+everything: latency classes are a CPU-starvation mitigation, not a
+general win.
+
+A conformance cell re-runs a single-class workload with ``slo_aware``
+on and off and asserts identical per-request timelines — with one class
+present the aware scheduler degenerates to the blind one exactly
+(plan-bit-identity is pinned in tests/test_slo.py; this checks the
+observable consequence end to end).
+
+  PYTHONPATH=src python -m benchmarks.slo_tiers [--fast]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.sim.serving import (llama8b_tp4_params, mixed_class_workload,
+                               with_slo)
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts"
+
+# Calibrated regime: 12 req/s mixed arrivals, batch prompts of 6144
+# tokens (3 chunks at the 2048 default; 12 at the aware 512 cap), step
+# budget of one default chunk so prefills serialize per step — the
+# per-step control-plane regime the paper measures.  At this rate a
+# 1-core control plane is saturated but not diverging: everything
+# completes, only the ORDER (and therefore interactive TTFT) differs.
+RPS = 12.0
+MAX_TOKENS_PER_STEP = 2048
+BATCH_TOKENS = 6_144
+INTERACTIVE_TOKENS = 256
+TIMEOUT = 60.0
+MIX = "interactive:0.5,batch:0.5"
+
+
+def _params(n_cores: int, aware: bool):
+    p = llama8b_tp4_params(n_cores)
+    sched = dataclasses.replace(p.scheduler,
+                                max_tokens_per_step=MAX_TOKENS_PER_STEP)
+    p = dataclasses.replace(p, timeout=TIMEOUT, scheduler=sched)
+    return with_slo(p, MIX, slo_aware=aware)
+
+
+def run_cell(n_cores: int, share: float, aware: bool,
+             duration: float) -> dict:
+    res = mixed_class_workload(
+        _params(n_cores, aware), rps=RPS, duration=duration,
+        interactive_share=share, interactive_tokens=INTERACTIVE_TOKENS,
+        batch_tokens=BATCH_TOKENS, horizon=duration + 2 * TIMEOUT)
+    cell = {"cores": n_cores, "interactive_share": share,
+            "scheduler": "aware" if aware else "blind",
+            "saturation_s": round(res.saturation_s, 1),
+            "classes": {}}
+    for name, c in sorted(res.slo_summary().items()):
+        # attainment over ALL requests of the class, not survivors —
+        # a timed-out request is a missed deadline, not a dropped sample
+        cell["classes"][name] = {
+            "n": c["n"],
+            "ttft_attainment": round(c["n_ttft_ok"] / c["n"], 3),
+            "tpot_attainment": (round(c["n_tpot_ok"]
+                                      / c["n_tpot_sample"], 3)
+                                if c["n_tpot_sample"] else None),
+            "timeouts": c["n_timeouts"],
+            "slack_hist": c["slack_hist"],
+        }
+    return cell
+
+
+def run_conformance(duration: float) -> dict:
+    """Single-class workload, aware vs blind: identical timelines.
+
+    Uses the interactive-only mix: with one class present (and no
+    per-class chunk override — BATCH's ``prefill_chunk=512`` is class
+    CONFIG and applies whenever that class is served aware), deadline
+    ordering, victim ranking, and shedding all degenerate and the aware
+    scheduler must reproduce the blind one step for step."""
+    runs = []
+    for aware in (False, True):
+        res = mixed_class_workload(
+            _params(1, aware), rps=RPS, duration=duration,
+            interactive_share=1.0,
+            interactive_tokens=INTERACTIVE_TOKENS,
+            horizon=duration + 2 * TIMEOUT)
+        runs.append([(round(r.t_first_token, 9), round(r.t_done, 9))
+                     for r in res.unique_requests()])
+    return {"n_requests": len(runs[0]), "identical": runs[0] == runs[1]}
+
+
+def run(fast: bool = False, write: bool = True) -> dict:
+    if fast:
+        core_axis, shares, duration = [1, 8], [0.5], 12.0
+    else:
+        core_axis, shares, duration = [1, 2, 8], [0.3, 0.5, 0.7], 20.0
+    cells: List[dict] = []
+    print("cores,share,scheduler,interactive_ttft,batch_ttft,"
+          "interactive_timeouts,batch_timeouts,saturation_s")
+    for n_cores in core_axis:
+        for share in shares:
+            for aware in (False, True):
+                c = run_cell(n_cores, share, aware, duration)
+                cells.append(c)
+                ia = c["classes"].get("interactive", {})
+                ba = c["classes"].get("batch", {})
+                print(f"{c['cores']},{c['interactive_share']},"
+                      f"{c['scheduler']},"
+                      f"{ia.get('ttft_attainment')},"
+                      f"{ba.get('ttft_attainment')},"
+                      f"{ia.get('timeouts')},{ba.get('timeouts')},"
+                      f"{c['saturation_s']}")
+
+    conformance = run_conformance(min(duration, 12.0))
+    print(f"\nconformance (single class, aware vs blind): "
+          f"identical={conformance['identical']} "
+          f"over {conformance['n_requests']} requests")
+
+    def cell(cores: int, sched: str) -> Optional[dict]:
+        return next((c for c in cells if c["cores"] == cores
+                     and c["scheduler"] == sched
+                     and c["interactive_share"] == shares[0]), None)
+
+    starved_blind = cell(core_axis[0], "blind")
+    starved_aware = cell(core_axis[0], "aware")
+    headline = {"starved_blind": starved_blind,
+                "starved_aware": starved_aware}
+    if starved_blind and starved_aware:
+        ib = starved_blind["classes"]["interactive"]["ttft_attainment"]
+        ia = starved_aware["classes"]["interactive"]["ttft_attainment"]
+        bb = starved_blind["classes"]["batch"]["ttft_attainment"]
+        ba = starved_aware["classes"]["batch"]["ttft_attainment"]
+        headline["interactive_ttft_blind"] = ib
+        headline["interactive_ttft_aware"] = ia
+        headline["aware_beats_blind"] = ia > ib
+        print(f"\nheadline: {core_axis[0]}-core budget at {RPS} req/s "
+              f"mixed — interactive TTFT attainment {ib:.0%} blind -> "
+              f"{ia:.0%} class-aware; batch attainment {bb:.0%} -> "
+              f"{ba:.0%} (deadline ordering costs batch a step, not "
+              f"its SLO)")
+    out = {"config": {"rps": RPS, "mix": MIX,
+                      "max_tokens_per_step": MAX_TOKENS_PER_STEP,
+                      "batch_tokens": BATCH_TOKENS,
+                      "interactive_tokens": INTERACTIVE_TOKENS,
+                      "timeout": TIMEOUT, "duration": duration,
+                      "core_axis": core_axis, "shares": shares},
+           "cells": cells, "conformance": conformance,
+           "headline": headline}
+    if write:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        (ARTIFACTS / "slo_tiers.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def main(fast: bool = False) -> None:
+    run(fast=fast or "--fast" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

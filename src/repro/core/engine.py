@@ -129,6 +129,9 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
             "n_prompt": req.n_prompt,
             "n_generated": len(req.generated),
             "timed_out": timed_out,
+            # SLO class name (docs/slo.md) so timeout/attainment rates
+            # can be split per class downstream
+            "slo": req.slo.name if req.slo is not None else None,
         })
         reqs.pop(req.req_id, None)
 
@@ -148,6 +151,10 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
             req = Request(text="", max_new_tokens=item["max_new_tokens"],
                           req_id=item["req_id"],
                           is_victim=item["is_victim"])
+            if item.get("slo") is not None:
+                # wire decode: the class crossed the queue as a plain dict
+                from repro.slo import SLOClass, tag_request
+                tag_request(req, SLOClass.from_dict(item["slo"]))
             req.prompt_tokens = item["tokens"]
             req.t_arrival = item["t_arrival"]
             req.t_tokenize_start = item["t_tokenize_start"]
@@ -227,6 +234,7 @@ def _engine_core(cfg: EngineConfig, in_q, out_q, stats_q, ring_name: str,
         "sched_cost": sched_costs,
         "barrier_wall": barrier_waits,
         "payload_bytes": payload_sizes,
+        "slo": sched.slo_snapshot(),
         "trace_events": prof.events if prof is not None else [],
     })
     ring.close()
@@ -264,11 +272,13 @@ def _worker(cfg: EngineConfig, idx: int, ring_name: str, board_name: str,
             tables.expand(plan)
             backend.execute(plan)         # accelerator executes
         else:
-            with prof.span("dispatch", step=plan.step_id):
+            # spans carry the plan's phase so phase_summary can roll up
+            # exposed time by prefill/decode/swap/dispatch (docs/profiling.md)
+            with prof.span("dispatch", step=plan.step_id, phase=plan.phase):
                 tables.expand(plan)
             # trace-only span ("device" is not an injection site): the
             # cover set critical_path_summary subtracts from exposed time
-            with prof.span("device", step=plan.step_id):
+            with prof.span("device", step=plan.step_id, phase=plan.phase):
                 backend.execute(plan)
         board.mark(idx, plan.step_id)
     stats_q.put({
@@ -335,11 +345,15 @@ class ServingSystem:
         return self
 
     def submit(self, text: str, max_new_tokens: int = 8,
-               is_victim: bool = False) -> int:
+               is_victim: bool = False, slo=None) -> int:
+        """Submit one request.  ``slo`` (a ``repro.slo.SLOClass``) tags it
+        with a latency class; the class rides the input queue as a dict
+        and the EngineCore re-applies it (docs/slo.md)."""
         with self._lock:
             rid = self._next_id
             self._next_id += 1
         t_arrival = time.perf_counter()
+        slo_wire = slo.to_dict() if slo is not None else None
         prof = self._prof
 
         def tokenize_and_enqueue() -> List[int]:
@@ -356,7 +370,7 @@ class ServingSystem:
                 "req_id": rid, "tokens": toks,
                 "max_new_tokens": max_new_tokens, "is_victim": is_victim,
                 "t_arrival": t_arrival, "t_tokenize_start": t_tok0,
-                "t_tokenize_done": t_tok1,
+                "t_tokenize_done": t_tok1, "slo": slo_wire,
             })
             return toks
 

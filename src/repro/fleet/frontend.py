@@ -76,15 +76,19 @@ class FleetServingFrontend:
 
     def submit(self, text: str, max_new_tokens: int = 8,
                is_victim: bool = False,
-               session: Optional[object] = None) -> Tuple[int, int]:
-        """Route and submit; returns (global request id, replica index)."""
+               session: Optional[object] = None,
+               slo=None) -> Tuple[int, int]:
+        """Route and submit; returns (global request id, replica index).
+        ``slo`` (an ``repro.slo.SLOClass`` or None) rides the replica's
+        wire to tag the request's latency class (docs/slo.md)."""
         # word-chunk chain keys stand in for the prompt-token stream: the
         # router (block_size 1) re-chains them into probe keys, which is
         # deterministic on both the dispatch and probe side
         keys = leading_word_keys(text, self.words_per_chunk,
                                  self.router.cfg.max_probe_blocks)
         idx = self.router.route(keys, session=session)
-        local = self.systems[idx].submit(text, max_new_tokens, is_victim)
+        local = self.systems[idx].submit(text, max_new_tokens, is_victim,
+                                         slo=slo)
         gid = self._next_gid
         self._next_gid += 1
         self._local_to_global[idx][local] = gid

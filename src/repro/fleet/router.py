@@ -228,8 +228,14 @@ class FleetRouter:
     def _load(self, s: Optional[PressureStats], idx: int) -> float:
         if s is None:
             return float(self._inflight[idx])
+        # SLO tie-break (docs/slo.md): a replica missing first-token
+        # deadlines for its protected classes looks up to 2x as loaded,
+        # so ties (and near-ties) drain toward replicas that are actually
+        # attaining.  slo_miss_rate() is 0.0 without class data, leaving
+        # class-blind fleets bit-identical.
         return ((1.0 + s.queue_depth + s.occupancy)
-                * (1.0 + s.kv_pressure))
+                * (1.0 + s.kv_pressure)
+                * (1.0 + s.slo_miss_rate()))
 
     def _p2c(self, candidates: List[int],
              snaps: List[Optional[PressureStats]]) -> int:
@@ -373,6 +379,25 @@ class FleetRouter:
         """Return a drained replica to the rotation (scale-up reusing
         the slot)."""
         self._drained.discard(idx)
+
+    def add_replica(self, stats_fn: Optional[
+            Callable[[], Optional[PressureStats]]] = None) -> int:
+        """Grow the fleet by one replica (scale-up acting on a
+        ``FleetAutoscaler`` recommendation); returns the new index.
+        The newcomer starts with empty bookkeeping — zero in-flight, an
+        empty optimistic bloom — so load-based policies naturally favor
+        it until it warms up."""
+        idx = self.n
+        self.n += 1
+        if stats_fn is not None and self.stats_fns is None:
+            self.stats_fns = [(lambda: None) for _ in range(idx)]
+        if self.stats_fns is not None:
+            self.stats_fns.append(stats_fn if stats_fn is not None
+                                  else (lambda: None))
+        self._inflight.append(0)
+        self._optimistic.append(PrefixSummary(self.cfg.summary_bits))
+        self._dispatched_since_rebuild.append(0)
+        return idx
 
     @property
     def outstanding(self) -> Dict[int, int]:

@@ -20,8 +20,10 @@ from repro.core.devmodel import DeviceModel
 from repro.core.engine import EngineConfig, ServingSystem
 from repro.profiling import (ProfilingConfig, critical_path_summary,
                              events_from_stats, export_chrome_trace,
-                             format_summary)
+                             format_phase_summary, format_summary,
+                             phase_summary)
 from repro.serving.scheduler import SchedulerConfig
+from repro.slo import SLOMix, parse_slo_mix
 
 
 def main() -> None:
@@ -132,6 +134,17 @@ def main() -> None:
                     help="fleet mode: distinct session prefixes in the "
                          "workload (each request leads with its session's "
                          "prefix — what affinity routing keys on)")
+    ap.add_argument("--slo-mix", default="",
+                    help="SLO latency classes (docs/slo.md): tag "
+                         "submissions per 'interactive:0.3,batch:0.7' "
+                         "(deterministic largest-remainder proportions) "
+                         "and run the scheduler class-aware — deadline-"
+                         "ordered admission, rank-aware victims, overload "
+                         "shedding; prints per-class attainment")
+    ap.add_argument("--slo-blind", action="store_true",
+                    help="with --slo-mix: tag the workload but keep the "
+                         "scheduler class-BLIND (the baseline attainment "
+                         "deltas are measured against)")
     ap.add_argument("--inject", default="",
                     help="speed-bump slowdown injection "
                          "(docs/profiling.md): 'site=delay_us,...' with "
@@ -190,6 +203,7 @@ def main() -> None:
             max_steps_per_dispatch=args.multi_step,
             speculative_k=args.speculative_k,
             per_tier_macros=args.per_tier_macros,
+            slo_aware=bool(args.slo_mix) and not args.slo_blind,
             t_swap_block_decode=(
                 device.cpu_tier(
                     decode_slowdown=args.decode_slowdown).t_swap_block
@@ -218,7 +232,10 @@ def main() -> None:
           f"victims={args.victim_selection} "
           f"copy_streams={args.copy_streams} "
           f"multi_step={args.multi_step} "
-          f"speculative_k={args.speculative_k} kv_dtype={args.kv_dtype}")
+          f"speculative_k={args.speculative_k} kv_dtype={args.kv_dtype}"
+          + (f" slo_mix={args.slo_mix}"
+             f"{' (blind)' if args.slo_blind else ''}"
+             if args.slo_mix else ""))
     text = "the quick brown fox jumps over the lazy dog " * (args.words // 9)
 
     if args.replicas > 1:
@@ -226,6 +243,7 @@ def main() -> None:
         return
 
     sys_ = ServingSystem(cfg).start()
+    slo_mix = SLOMix(parse_slo_mix(args.slo_mix)) if args.slo_mix else None
     with CpuSampler(0.05) as sampler:
         t0 = time.perf_counter()
         for i in range(args.requests):
@@ -234,7 +252,8 @@ def main() -> None:
             if target > now:
                 time.sleep(target - now)
             sys_.submit(text, max_new_tokens=args.max_new,
-                        is_victim=(i % 5 == 0))
+                        is_victim=(i % 5 == 0),
+                        slo=slo_mix.next() if slo_mix else None)
         results = sys_.collect(args.requests, timeout=120.0)
     stats = sys_.shutdown()
 
@@ -244,6 +263,7 @@ def main() -> None:
         print(f"[trace] wrote {n} events to {args.trace_out} "
               f"(chrome://tracing / ui.perfetto.dev)")
         print(format_summary(critical_path_summary(pairs)))
+        print(format_phase_summary(phase_summary(pairs)))
 
     finished = [r for r in results.values() if not r.get("timed_out")]
     ttfts = sorted(r["t_first_token"] - r["t_arrival"] for r in finished)
@@ -265,6 +285,8 @@ def main() -> None:
                       f"{st.median(dq)*1e3:.2f}ms max={max(dq)*1e3:.1f}ms "
                       f"n={len(dq)}")
     eng = next((s for s in stats if s["role"] == "engine"), None)
+    if eng:
+        _print_slo(eng.get("slo"), "serve")
     if eng and eng["sched_cost"]:
         print(f"[serve] sched p50={st.median(eng['sched_cost'])*1e6:.0f}us "
               f"steps={len(eng['sched_cost'])} "
@@ -276,6 +298,23 @@ def main() -> None:
     print(f"[serve] cpu saturation(>=95%)={sampler.saturation_seconds():.1f}s")
 
 
+def _print_slo(snap, tag: str) -> None:
+    """Per-class SLO attainment (Scheduler.slo_snapshot format)."""
+    if not snap:
+        return
+    for name, c in sorted(snap["classes"].items(),
+                          key=lambda kv: -kv[1]["rank"]):
+        ttft = c.get("ttft_attainment")
+        tpot = c.get("tpot_attainment")
+        print(f"[{tag}] slo {name} (rank {c['rank']}): "
+              f"first={c['n_first']} "
+              f"ttft_ok={f'{100 * ttft:.0f}%' if ttft is not None else '-'} "
+              f"tpot_ok={f'{100 * tpot:.0f}%' if tpot is not None else '-'} "
+              f"done={c['n_done']} timeouts={c['n_timeouts']}")
+    if snap.get("shedding"):
+        print(f"[{tag}] slo: overload shedding active at shutdown")
+
+
 def _serve_fleet(args, cfg: EngineConfig, base_text: str) -> None:
     """Fleet mode: N engine replicas behind a FleetRouter (docs/fleet.md).
 
@@ -285,6 +324,7 @@ def _serve_fleet(args, cfg: EngineConfig, base_text: str) -> None:
                              ReplicaSignals)
     fleet = FleetServingFrontend([cfg] * args.replicas,
                                  routing=args.routing).start()
+    slo_mix = SLOMix(parse_slo_mix(args.slo_mix)) if args.slo_mix else None
     with CpuSampler(0.05) as sampler:
         t0 = time.perf_counter()
         for i in range(args.requests):
@@ -296,7 +336,8 @@ def _serve_fleet(args, cfg: EngineConfig, base_text: str) -> None:
             text = (f"session {sid} shared context preamble " * 8
                     + base_text)
             fleet.submit(text, max_new_tokens=args.max_new,
-                         is_victim=(i % 5 == 0), session=sid)
+                         is_victim=(i % 5 == 0), session=sid,
+                         slo=slo_mix.next() if slo_mix else None)
         results = fleet.collect(args.requests, timeout=120.0)
     pressures = fleet.pressure()
     router = fleet.router.stats()
@@ -310,6 +351,7 @@ def _serve_fleet(args, cfg: EngineConfig, base_text: str) -> None:
         print(f"[trace] wrote {n} events ({args.replicas} replicas) to "
               f"{args.trace_out}")
         print(format_summary(critical_path_summary(pairs)))
+        print(format_phase_summary(phase_summary(pairs)))
 
     finished = [r for r in results.values()
                 if not r.get("timed_out") and r.get("t_first_token")]
@@ -354,6 +396,8 @@ def _serve_fleet(args, cfg: EngineConfig, base_text: str) -> None:
           f"({rec.reason})")
     for idx, stats in enumerate(all_stats):
         eng = next((s for s in stats if s["role"] == "engine"), None)
+        if eng:
+            _print_slo(eng.get("slo"), f"fleet r{idx}")
         if eng and eng["sched_cost"]:
             print(f"[fleet] replica{idx} sched p50="
                   f"{st.median(eng['sched_cost'])*1e6:.0f}us "

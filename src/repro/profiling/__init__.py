@@ -129,13 +129,17 @@ class ProfilingConfig:
 class SpanEvent:
     """One completed span (or instant, when ``dur == 0.0`` and
     ``instant``): ``t0`` is CLOCK_MONOTONIC seconds, comparable across
-    processes on one machine."""
+    processes on one machine.  ``phase`` is the step's scheduling phase
+    (``StepPlan.phase``: prefill/decode/mixed/swap/dispatch) when the
+    emitter knew it — ``phase_summary`` joins phase-less spans to it by
+    step id."""
     site: str
     t0: float
     dur: float
     step: Optional[int] = None
     req: Optional[int] = None
     instant: bool = False
+    phase: Optional[str] = None
 
 
 class _Span:
@@ -143,14 +147,16 @@ class _Span:
     injected delay INSIDE it — the module under measurement really gets
     slower, and the trace shows the bump where it was charged."""
 
-    __slots__ = ("prof", "site", "step", "req", "t0")
+    __slots__ = ("prof", "site", "step", "req", "phase", "t0")
 
     def __init__(self, prof: "Profiler", site: str,
-                 step: Optional[int], req: Optional[int]):
+                 step: Optional[int], req: Optional[int],
+                 phase: Optional[str]):
         self.prof = prof
         self.site = site
         self.step = step
         self.req = req
+        self.phase = phase
 
     def __enter__(self) -> "_Span":
         self.t0 = time.perf_counter()
@@ -165,7 +171,7 @@ class _Span:
         if prof.trace:
             prof.events.append(SpanEvent(
                 self.site, self.t0, time.perf_counter() - self.t0,
-                self.step, self.req))
+                self.step, self.req, phase=self.phase))
 
 
 class Profiler:
@@ -194,8 +200,9 @@ class Profiler:
     # -- wall mode -------------------------------------------------------
 
     def span(self, site: str, *, step: Optional[int] = None,
-             req: Optional[int] = None) -> _Span:
-        return _Span(self, site, step, req)
+             req: Optional[int] = None,
+             phase: Optional[str] = None) -> _Span:
+        return _Span(self, site, step, req, phase)
 
     # -- both modes ------------------------------------------------------
 
@@ -314,6 +321,8 @@ def export_chrome_trace(pairs: List[Tuple[str, SpanEvent]],
             args["step"] = ev.step
         if ev.req is not None:
             args["req"] = ev.req
+        if ev.phase is not None:
+            args["phase"] = ev.phase
         rec = {"name": ev.site, "cat": "control-plane",
                "pid": 0, "tid": tid[role],
                "ts": (ev.t0 - t_base) * 1e6, "args": args}
@@ -385,6 +394,68 @@ def critical_path_summary(pairs: List[Tuple[str, SpanEvent]],
         s["exposed_s"] += max(0.0, ev.dur - _overlap(ev.t0, ev.t0 + ev.dur,
                                                      device))
     return summary
+
+
+def phase_summary(pairs: List[Tuple[str, SpanEvent]],
+                  device_site: str = "device") -> Dict[str, dict]:
+    """Flamegraph-style rollup of exposed control-plane time by STEP
+    PHASE (``StepPlan.phase``: prefill / decode / mixed / swap /
+    dispatch), with a per-site breakdown inside each phase.
+
+    ``critical_path_summary`` answers "which module exposes time"; this
+    answers "during which kind of step" — the paper's per-phase view
+    (prefill steps tolerate control-plane cost, decode steps amortize
+    nothing).  Spans that don't carry a phase themselves (the engine's
+    scheduler/broadcast spans) join to one through their step id, using
+    the phase the workers' spans recorded for that step; spans with
+    neither land in ``"unattributed"``."""
+    phase_of: Dict[int, str] = {}
+    for _, ev in pairs:
+        if ev.phase is not None and ev.step is not None:
+            phase_of.setdefault(ev.step, ev.phase)
+    device = _merge_intervals([(ev.t0, ev.t0 + ev.dur)
+                               for _, ev in pairs
+                               if ev.site == device_site and not ev.instant])
+    out: Dict[str, dict] = {}
+    for _, ev in pairs:
+        if ev.site == device_site or ev.instant:
+            continue
+        phase = ev.phase
+        if phase is None and ev.step is not None:
+            phase = phase_of.get(ev.step)
+        if phase is None:
+            phase = "unattributed"
+        p = out.setdefault(phase, {"count": 0, "total_s": 0.0,
+                                   "exposed_s": 0.0, "sites": {}})
+        exposed = max(0.0, ev.dur - _overlap(ev.t0, ev.t0 + ev.dur,
+                                             device))
+        p["count"] += 1
+        p["total_s"] += ev.dur
+        p["exposed_s"] += exposed
+        s = p["sites"].setdefault(ev.site, {"count": 0, "total_s": 0.0,
+                                            "exposed_s": 0.0})
+        s["count"] += 1
+        s["total_s"] += ev.dur
+        s["exposed_s"] += exposed
+    return out
+
+
+def format_phase_summary(summary: Dict[str, dict]) -> str:
+    """Indented text flamegraph: one row per phase, site rows under it,
+    both ordered by exposed time."""
+    lines = [f"{'phase / site':<22} {'count':>7} {'total_ms':>10} "
+             f"{'exposed_ms':>11}"]
+    for phase, p in sorted(summary.items(),
+                           key=lambda kv: -kv[1]["exposed_s"]):
+        lines.append(f"{phase:<22} {p['count']:>7} "
+                     f"{p['total_s'] * 1e3:>10.2f} "
+                     f"{p['exposed_s'] * 1e3:>11.2f}")
+        for site, s in sorted(p["sites"].items(),
+                              key=lambda kv: -kv[1]["exposed_s"]):
+            lines.append(f"  {site:<20} {s['count']:>7} "
+                         f"{s['total_s'] * 1e3:>10.2f} "
+                         f"{s['exposed_s'] * 1e3:>11.2f}")
+    return "\n".join(lines)
 
 
 def format_summary(summary: Dict[str, dict]) -> str:

@@ -36,6 +36,13 @@ class Request:
     # finished sequence; the scheduler rolls back the unused reservation.
     eos_token: Optional[int] = None
 
+    # SLO latency class (repro.slo, docs/slo.md).  None = untagged:
+    # scheduled as STANDARD but excluded from attainment accounting.
+    slo: Optional["SLOClass"] = None  # noqa: F821 - repro.slo.SLOClass
+    # per-request client timeout; None = the engine/DES global default.
+    # tag_request() fills it from the class's timeout.
+    timeout: Optional[float] = None
+
     # token state
     prompt_tokens: Optional[List[int]] = None
     prefilled: int = 0             # prompt tokens already prefilled
@@ -73,6 +80,13 @@ class Request:
     def ttft(self) -> Optional[float]:
         if self.t_first_token:
             return self.t_first_token - self.t_arrival
+        return None
+
+    @property
+    def ttft_deadline(self) -> Optional[float]:
+        """Absolute first-token deadline, if the request carries a class."""
+        if self.slo is not None:
+            return self.t_arrival + self.slo.ttft_target
         return None
 
     @property

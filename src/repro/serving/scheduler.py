@@ -51,6 +51,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.serving.blocks import BlockManager, HostSwapSpace, chain_key
 from repro.serving.request import Request, RequestState
+from repro.slo import STANDARD, slack_bucket
 
 # transfer kinds for the async copy engine (mirrors repro.core.copyengine,
 # which cannot be imported at module level: repro.core.__init__ pulls in
@@ -166,6 +167,26 @@ class SchedulerConfig:
     # pressure eases.  > 1 disables the feedback.
     re_evict_threshold: float = 0.5
     re_evict_min_samples: int = 4      # restores observed before acting
+    # -- SLO latency classes (repro.slo, docs/slo.md) -------------------
+    # Turns on class-aware scheduling for requests tagged with an
+    # SLOClass: EDF-flavored waiting-queue admission (ordered by slack to
+    # each request's TTFT deadline — only when >= 2 distinct classes are
+    # queued, so single-class plans stay bit-identical to the class-blind
+    # path), per-class prefill_chunk caps, a class-rank term in victim
+    # selection (best-effort evicted before interactive), and overload
+    # shedding.  Per-class attainment ACCOUNTING is always on for tagged
+    # requests regardless of this flag, so a class-blind baseline still
+    # reports attainment.
+    slo_aware: bool = False
+    # overload shedding: while classes with rank >= shed_min_rank show a
+    # sustained TTFT-deadline miss rate above shed_miss_threshold
+    # (counters decay with the overload window, so shedding is re-probed
+    # once pressure eases), waiting requests with rank < shed_min_rank
+    # are deprioritized — parked in the queue, not admitted — whenever
+    # anything else could use the step.
+    shed_min_rank: int = 1
+    shed_miss_threshold: float = 0.5
+    shed_min_samples: int = 4
 
     def __post_init__(self):
         if self.max_steps_per_dispatch < 1:
@@ -269,6 +290,22 @@ class StepPlan:
     def last_step_id(self) -> int:
         """Step id of the final inner iteration (== step_id when k=1)."""
         return self.step_id + self.num_steps - 1
+
+    @property
+    def phase(self) -> str:
+        """Coarse step phase for profiling rollups (docs/profiling.md):
+        ``swap`` when transfer directives ride the plan, else the compute
+        mix (``prefill``/``decode``/``mixed``); a notice-only plan is
+        pure ``dispatch``."""
+        if self.swap_outs or self.restores:
+            return "swap"
+        if self.prefill and self.decode:
+            return "mixed"
+        if self.prefill:
+            return "prefill"
+        if self.decode:
+            return "decode"
+        return "dispatch"
 
     @property
     def n_tokens(self) -> int:
@@ -438,7 +475,28 @@ class PressureStats:
     n_preempted: int          # cumulative evictions (recompute + swap)
     n_timed_out: int          # cumulative client timeouts + up-front rejects
     cpu_saturation: float = 0.0
+    n_finished: int = 0       # cumulative completions (rate via differencing)
+    # per-class SLO attainment snapshot (docs/slo.md): None when no tagged
+    # request has been observed, else {"classes": {name: counters +
+    # attainment fractions + slack_hist}, "shedding": bool}.  Counters are
+    # cumulative, like n_preempted/n_timed_out.
+    slo: Optional[dict] = None
     prefix_summary: Optional[object] = None
+
+    def slo_miss_rate(self, min_rank: int = 2, min_samples: int = 4) -> float:
+        """Worst TTFT-deadline miss fraction among classes with rank >=
+        ``min_rank`` (interactive tier by default) — the term fleet
+        routing folds into replica load so dispatch prefers replicas
+        meeting the interactive SLO.  Timeouts count as misses; 0.0 when
+        no such class has enough samples."""
+        if not self.slo:
+            return 0.0
+        worst = 0.0
+        for c in self.slo["classes"].values():
+            n = c["n_first"] + c["n_timeouts"]
+            if c["rank"] >= min_rank and n >= min_samples:
+                worst = max(worst, (n - c["n_ttft_ok"]) / n)
+        return worst
 
     @property
     def kv_pressure(self) -> float:
@@ -491,6 +549,16 @@ class Scheduler:
         # cumulative pressure counters (fleet routing / autoscaling signals)
         self.n_preempted_total = 0
         self.n_timed_out_total = 0
+        self.n_finished_total = 0
+        # per-class SLO attainment counters (docs/slo.md) — always
+        # maintained for tagged requests; cfg.slo_aware only gates
+        # scheduling BEHAVIOR, so a class-blind baseline still reports
+        # attainment for comparison
+        self._slo_acct: Dict[str, dict] = {}
+        # shedding window: TTFT-deadline outcomes of protected classes
+        # (rank >= shed_min_rank); decayed with the overload window
+        self._shed_samples = 0
+        self._shed_misses = 0
         # last externally reported CPU saturation (0..1); the engine/DES
         # owns the measurement, the scheduler just carries it into
         # ``pressure_stats`` snapshots
@@ -516,6 +584,7 @@ class Scheduler:
             # queue head where it would head-of-line-block all admission
             req.state = RequestState.TIMED_OUT
             self.n_timed_out_total += 1
+            self._note_timeout(req)
             return
         if self.cfg.enable_prefix_cache:
             # probe only (no locks while waiting); the hit is re-resolved —
@@ -705,16 +774,31 @@ class Scheduler:
         (other than ``req``, while any other holds blocks) whose
         eviction is cheapest under the active policy, ties broken
         toward the youngest admission — so FIFO fairness is the
-        tie-break, not the rule."""
-        if self.cfg.victim_selection == "lifo" or len(self.running) == 1:
+        tie-break, not the rule.
+
+        With ``cfg.slo_aware`` a class-rank term (docs/slo.md) is
+        composed IN FRONT of both rules: the lowest preemption rank
+        present is victimized first (best-effort before interactive),
+        the original rule breaking ties within that rank.  Equal ranks —
+        including the single-class and untagged cases — degenerate to
+        the class-blind ordering exactly."""
+        if len(self.running) == 1:
             return self.running[-1]
+        if self.cfg.victim_selection == "lifo":
+            if not self.cfg.slo_aware:
+                return self.running[-1]
+            low = min(self._victim_rank(r) for r in self.running)
+            for r in reversed(self.running):
+                if self._victim_rank(r) == low:
+                    return r
         candidates = [r for r in self.running
                       if r is not req and r.block_table]
         if not candidates:
             return self.running[-1]
         index_of = {id(r): i for i, r in enumerate(self.running)}
         return min(candidates,
-                   key=lambda r: (self._eviction_cost(r),
+                   key=lambda r: (self._victim_rank(r),
+                                  self._eviction_cost(r),
                                   -index_of[id(r)]))
 
     def _preempt_recompute(self, victim: Request, plan: StepPlan) -> None:
@@ -816,6 +900,8 @@ class Scheduler:
         req.state = RequestState.FINISHED
         self._release_blocks(req)
         self.running.remove(req)
+        self.n_finished_total += 1
+        self._note_done(req)
 
     def _finish_restore(self, req: Request) -> None:
         """Completion action of a restore transfer (async copy engine):
@@ -835,24 +921,31 @@ class Scheduler:
         # re-admission path
         self.running.insert(0, req)
 
+    def _expired(self, req: Request, now: float, timeout: float) -> bool:
+        """Client-timeout predicate: the request's own ``timeout`` (set
+        from its SLO class, docs/slo.md) overrides the global default."""
+        limit = req.timeout if req.timeout is not None else timeout
+        return not req.t_first_token and now - req.t_arrival > limit
+
     def expire(self, now: float, timeout: float) -> List[Request]:
         """Abort requests whose client timed out (no first token within
-        ``timeout``) — vLLM cancels on client disconnect, which bounds the
-        queue under open-loop overload."""
+        the request's timeout, default ``timeout``) — vLLM cancels on
+        client disconnect, which bounds the queue under open-loop
+        overload."""
         dead = []
         for req in list(self.waiting):
-            if not req.t_first_token and now - req.t_arrival > timeout:
+            if self._expired(req, now, timeout):
                 req.state = RequestState.TIMED_OUT
                 self.waiting.remove(req)
                 dead.append(req)
         for req in list(self.running):
-            if not req.t_first_token and now - req.t_arrival > timeout:
+            if self._expired(req, now, timeout):
                 req.state = RequestState.TIMED_OUT
                 self._release_blocks(req)
                 self.running.remove(req)
                 dead.append(req)
         for req in list(self.swapped):
-            if not req.t_first_token and now - req.t_arrival > timeout:
+            if self._expired(req, now, timeout):
                 req.state = RequestState.TIMED_OUT
                 self.blocks.swap_release(req.req_id)
                 req.host_block_table = []
@@ -863,7 +956,7 @@ class Scheduler:
                 self._dropped_while_swapped.append(req.req_id)
                 dead.append(req)
         for req in list(self.restoring):
-            if not req.t_first_token and now - req.t_arrival > timeout:
+            if self._expired(req, now, timeout):
                 # the restore copy is still in flight: only mark the abort
                 # here — its blocks stay IN_FLIGHT until the transfer's
                 # epoch retires and ``_finish_restore`` reclaims them
@@ -871,7 +964,125 @@ class Scheduler:
                 self.restoring.remove(req)
                 dead.append(req)
         self.n_timed_out_total += len(dead)
+        for req in dead:
+            self._note_timeout(req)
         return dead
+
+    # -- SLO latency classes (repro.slo, docs/slo.md) --------------------------
+
+    def _slo_of(self, req: Request):
+        """The class scheduling decisions key off — untagged requests
+        behave as STANDARD (middle rank, default chunk)."""
+        return req.slo if req.slo is not None else STANDARD
+
+    def _victim_rank(self, req: Request) -> int:
+        """Preemption-rank term for victim selection: lower ranks are
+        evicted first.  Constant 0 when class-aware scheduling is off, so
+        the composed keys degenerate to the class-blind ordering."""
+        if not self.cfg.slo_aware:
+            return 0
+        return self._slo_of(req).rank
+
+    def _chunk_for(self, req: Request) -> int:
+        """Per-step prefill chunk for ``req``: the class's cap (if any)
+        composed with the global one, so a batch prompt can't monopolize
+        a step an interactive request is queued behind."""
+        chunk = self.cfg.prefill_chunk
+        if self.cfg.slo_aware:
+            cls = self._slo_of(req)
+            if cls.prefill_chunk > 0:
+                chunk = min(chunk, cls.prefill_chunk)
+        return chunk
+
+    def _slack_key(self, req: Request) -> float:
+        """EDF admission key: absolute TTFT deadline minus the estimated
+        remaining prefill time (``t_recompute_token`` doubles as the
+        per-token prefill estimate).  Smaller = more urgent; the shared
+        "now" term cancels out of the ordering."""
+        cls = self._slo_of(req)
+        return (req.t_arrival + cls.ttft_target
+                - req.prefill_remaining * self.cfg.t_recompute_token)
+
+    def _acct_for(self, cls) -> dict:
+        acct = self._slo_acct.get(cls.name)
+        if acct is None:
+            acct = self._slo_acct[cls.name] = {
+                "rank": cls.rank, "n_first": 0, "n_ttft_ok": 0,
+                "n_done": 0, "n_tpot_sample": 0, "n_tpot_ok": 0,
+                "n_timeouts": 0, "slack_hist": {}}
+        return acct
+
+    def _note_first_token(self, req: Request) -> None:
+        """Record a first-token event against the request's class (call
+        right after ``t_first_token`` is stamped)."""
+        cls = req.slo
+        if cls is None:
+            return
+        acct = self._acct_for(cls)
+        acct["n_first"] += 1
+        slack = (req.t_arrival + cls.ttft_target) - req.t_first_token
+        if slack >= 0:
+            acct["n_ttft_ok"] += 1
+        hist = acct["slack_hist"]
+        b = slack_bucket(slack)
+        hist[b] = hist.get(b, 0) + 1
+        if cls.rank >= self.cfg.shed_min_rank:
+            self._shed_samples += 1
+            if slack < 0:
+                self._shed_misses += 1
+
+    def _note_done(self, req: Request) -> None:
+        cls = req.slo
+        if cls is None:
+            return
+        acct = self._acct_for(cls)
+        acct["n_done"] += 1
+        n_gen = len(req.generated)
+        if req.t_first_token and n_gen >= 2:
+            acct["n_tpot_sample"] += 1
+            tpot = (req.t_done - req.t_first_token) / (n_gen - 1)
+            if tpot <= cls.tpot_target:
+                acct["n_tpot_ok"] += 1
+
+    def _note_timeout(self, req: Request) -> None:
+        cls = req.slo
+        if cls is None:
+            return
+        self._acct_for(cls)["n_timeouts"] += 1
+        if cls.rank >= self.cfg.shed_min_rank:
+            # a protected-class request that died without a first token
+            # is the hardest possible deadline miss
+            self._shed_samples += 1
+            self._shed_misses += 1
+
+    def _shedding_active(self) -> bool:
+        """True while protected classes (rank >= shed_min_rank) show a
+        sustained TTFT-deadline miss rate — admission then deprioritizes
+        lower-rank (batch-tier) work.  Counters decay with the overload
+        window, so shedding self-clears once the misses stop."""
+        if not self.cfg.slo_aware:
+            return False
+        if self._shed_samples < self.cfg.shed_min_samples:
+            return False
+        return (self._shed_misses
+                > self.cfg.shed_miss_threshold * self._shed_samples)
+
+    def slo_snapshot(self) -> Optional[dict]:
+        """Per-class attainment counters + fractions for pressure_stats /
+        the engine stats stream; None until a tagged request is seen."""
+        if not self._slo_acct:
+            return None
+        classes = {}
+        for name, acct in self._slo_acct.items():
+            c = dict(acct)
+            c["slack_hist"] = dict(acct["slack_hist"])
+            n_first, n_tpot = c["n_first"], c["n_tpot_sample"]
+            c["ttft_attainment"] = (
+                c["n_ttft_ok"] / n_first if n_first else None)
+            c["tpot_attainment"] = (
+                c["n_tpot_ok"] / n_tpot if n_tpot else None)
+            classes[name] = c
+        return {"classes": classes, "shedding": self._shedding_active()}
 
     # -- pressure snapshot (fleet routing) -------------------------------------
 
@@ -909,6 +1120,8 @@ class Scheduler:
             n_preempted=self.n_preempted_total,
             n_timed_out=self.n_timed_out_total,
             cpu_saturation=self.cpu_saturation,
+            n_finished=self.n_finished_total,
+            slo=self.slo_snapshot(),
             prefix_summary=summary)
 
     # -- the per-step decision -------------------------------------------------
@@ -926,6 +1139,10 @@ class Scheduler:
         if self._overload_tick % self._OVERLOAD_WINDOW == 0:
             self._n_restores //= 2
             self._n_re_evicts //= 2
+            # shedding windows decay on the same clock, so batch-tier
+            # admission is re-probed once interactive misses stop
+            self._shed_samples //= 2
+            self._shed_misses //= 2
 
         # 0. re-admit swapped requests (FIFO) ahead of ALL fresh work: their
         # computed KV is sunk transfer cost, and restoring is pure copy
@@ -1019,7 +1236,7 @@ class Scheduler:
         for req in list(self.running):
             if req.state != RequestState.PREFILLING or budget <= 0:
                 continue
-            n = min(req.prefill_remaining, cfg.prefill_chunk, budget)
+            n = min(req.prefill_remaining, self._chunk_for(req), budget)
             if n > 0:
                 ok, refund = self._allocate_with_preemption(req, n, plan)
                 budget += refund
@@ -1037,13 +1254,35 @@ class Scheduler:
         # next chunk only, not the whole prompt + max_new_tokens — decode
         # growth beyond capacity is handled by preemption, not head-of-line
         # blocking.  Admission itself never preempts running work.
+        #
+        # SLO-aware admission (docs/slo.md): when >= 2 distinct classes
+        # are queued, the waiting queue is ordered by slack to each
+        # request's TTFT deadline (EDF-flavored, ``_slack_key``) instead
+        # of FIFO — with a single class present the order is untouched,
+        # so plans stay bit-identical to the class-blind path.  While
+        # protected classes show sustained deadline misses
+        # (``_shedding_active``), admissions below ``shed_min_rank`` are
+        # parked (skipped, not popped) whenever anything else could use
+        # the step — the freed capacity goes to the missing classes, and
+        # the decaying window un-parks batch once misses stop.
         bs = cfg.block_size
-        while (self.waiting and budget > 0
+        if (cfg.slo_aware and len(self.waiting) > 1
+                and len({self._slo_of(r).name for r in self.waiting}) > 1):
+            self.waiting.sort(key=self._slack_key)
+        shed = self._shedding_active()
+        wi = 0
+        while (wi < len(self.waiting) and budget > 0
                and len(self.running) + len(self.restoring)
                < cfg.max_num_seqs):          # RESTORING requests re-enter
                                              # running at epoch retire —
                                              # they hold batch slots too
-            req = self.waiting[0]
+            req = self.waiting[wi]
+            if (shed and self._victim_rank(req) < cfg.shed_min_rank
+                    and (self.running
+                         or any(self._victim_rank(w) >= cfg.shed_min_rank
+                                for w in self.waiting))):
+                wi += 1                      # shed: batch-tier admission
+                continue                     # parked, queue order kept
             # add_request() rejects requests that can never fit, so the head
             # of the queue always fits the pool when it runs alone
             if cfg.enable_prefix_cache:
@@ -1055,11 +1294,11 @@ class Scheduler:
                 req.block_table = blks
                 req.kv_slots = hit
                 req.kv_allocated = len(blks) * bs
-            n = min(req.prefill_remaining, cfg.prefill_chunk, budget)
+            n = min(req.prefill_remaining, self._chunk_for(req), budget)
             if not self._alloc_slots(req, n):
                 self._release_blocks(req)      # undo prefix locks; retry later
                 break
-            self.waiting.pop(0)
+            self.waiting.pop(wi)
             self.running.append(req)
             req.state = RequestState.PREFILLING
             if n > 0:
@@ -1239,6 +1478,7 @@ class Scheduler:
                     produced += 1
                     if not req.t_first_token:
                         req.t_first_token = now
+                        self._note_first_token(req)
                     if len(req.generated) >= req.max_new_tokens:
                         break
                     if (req.eos_token is not None
@@ -1263,6 +1503,7 @@ class Scheduler:
                     tok = tokens.get(rid, 0)
                     req.generated.append(tok)
                     req.t_first_token = now
+                    self._note_first_token(req)
                     if (len(req.generated) >= req.max_new_tokens
                             or (req.eos_token is not None
                                 and tok == req.eos_token)):
@@ -1279,6 +1520,7 @@ class Scheduler:
             req.generated.append(tok)
             if not req.t_first_token:
                 req.t_first_token = now
+                self._note_first_token(req)
             if (len(req.generated) >= req.max_new_tokens
                     or (req.eos_token is not None
                         and tok == req.eos_token)):
@@ -1294,6 +1536,7 @@ class Scheduler:
                 tok = tokens.get(rid, 0)
                 req.generated.append(tok)
                 req.t_first_token = now
+                self._note_first_token(req)
                 if (len(req.generated) >= req.max_new_tokens
                         or (req.eos_token is not None
                             and tok == req.eos_token)):

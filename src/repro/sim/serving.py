@@ -28,6 +28,8 @@ from repro.profiling import Profiler, ProfilingConfig
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler, SchedulerConfig, StepPlan
 from repro.sim.core import Event, Sim
+from repro.slo import (BATCH, INTERACTIVE, SLOClass, SLOMix, parse_slo_mix,
+                       slo_summary, tag_request)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +81,14 @@ class ServingParams:
     # under the exact core budget being swept.  "" = no profiler at all;
     # a spec whose delays are all 0 is bit-exact with "" (the oracle).
     inject: str = ""
+    # SLO latency classes (repro.slo, docs/slo.md): an
+    # "interactive:0.3,batch:0.7" spec makes ``add_request``/``inject_now``
+    # tag otherwise-untagged requests in exact mix proportions
+    # (deterministic largest-remainder, no RNG).  "" = no tagging.
+    # Class-aware scheduling BEHAVIOR is a separate knob
+    # (``scheduler.slo_aware``), so a class-blind baseline can serve the
+    # same tagged workload.
+    slo_mix: str = ""
 
 
 def _dedup_by_rid(reqs: List[Request]) -> List[Request]:
@@ -125,6 +135,11 @@ class WorkloadResult:
             out.append(r.ttft if r.t_first_token else None)   # None = timeout
         return out
 
+    def slo_summary(self) -> Dict[str, dict]:
+        """Per-class SLO attainment over the deduplicated requests
+        (repro.slo.slo_summary; empty when nothing is tagged)."""
+        return slo_summary(self.unique_requests())
+
 
 class ServingModel:
     def __init__(self, params: ServingParams):
@@ -162,6 +177,10 @@ class ServingModel:
             Profiler(ProfilingConfig(inject=params.inject),
                      role="sim", virtual=True)
             if params.inject else None)
+        # deterministic class assigner for untagged adds (docs/slo.md)
+        self._slo_mix: Optional[SLOMix] = (
+            SLOMix(parse_slo_mix(params.slo_mix))
+            if params.slo_mix else None)
         self.requests: List[Request] = []
         self.tok_queue: List[Request] = []
         self.tok_ev = self.sim.event("tok-queue")
@@ -183,14 +202,23 @@ class ServingModel:
 
     # -- request injection -------------------------------------------------------
 
+    def _assign_slo(self, req: Request, slo: Optional[SLOClass]) -> None:
+        """Tag ``req``: an explicit class wins, else draw from the
+        params-level mix (deterministic in creation order), else untagged."""
+        if slo is None and self._slo_mix is not None:
+            slo = self._slo_mix.next()
+        tag_request(req, slo)
+
     def add_request(self, t_arrival: float, n_tokens: int,
                     max_new_tokens: int = 8, is_victim: bool = False,
-                    stream: int = 0) -> Request:
+                    stream: int = 0,
+                    slo: Optional[SLOClass] = None) -> Request:
         """``stream`` namespaces the token ids: requests in different streams
         share no prefix (attackers with identical prompts DO share one and
         get vLLM-style prefix-cache hits)."""
         req = Request(text="", max_new_tokens=max_new_tokens,
                       is_victim=is_victim)
+        self._assign_slo(req, slo)
         base = stream << 24
         req.prompt_tokens = list(range(base, base + n_tokens))
         req.t_arrival = t_arrival
@@ -205,10 +233,12 @@ class ServingModel:
         return req
 
     def inject_now(self, n_tokens: int, max_new_tokens: int = 8,
-                   is_victim: bool = False, stream: int = 0) -> Request:
+                   is_victim: bool = False, stream: int = 0,
+                   slo: Optional[SLOClass] = None) -> Request:
         """Add a request at the current sim time (for issuer procs)."""
         req = Request(text="", max_new_tokens=max_new_tokens,
                       is_victim=is_victim)
+        self._assign_slo(req, slo)
         base = stream << 24
         req.prompt_tokens = list(range(base, base + n_tokens))
         return self.inject_request(req)
@@ -409,11 +439,14 @@ class ServingModel:
         self.sim.run(until=until)
 
     def finalize(self) -> WorkloadResult:
-        # mark timeouts (including ones the engine never got to expire)
+        # mark timeouts (including ones the engine never got to expire);
+        # a request's own timeout (from its SLO class) overrides the global
         for req in self.requests:
             if not req.t_first_token:
+                limit = (req.timeout if req.timeout is not None
+                         else self.p.timeout)
                 ttft_so_far = self.sim.now - req.t_arrival
-                if ttft_so_far >= self.p.timeout - 1e-9:
+                if ttft_so_far >= limit - 1e-9:
                     req.state = RequestState.TIMED_OUT
         return WorkloadResult(
             requests=self.requests,
@@ -434,7 +467,7 @@ def victim_stats(res: WorkloadResult, timeout: float) -> dict:
     (fig7 and preemption_policy must aggregate identically)."""
     tt = res.victim_ttfts()
     done = [t for t in tt if t is not None and t < timeout]
-    return {
+    out = {
         "victim_ttfts": [round(t, 2) if t is not None else None for t in tt],
         "first_victim_ttft": round(tt[0], 2) if tt and tt[0] else None,
         "mean_completed_ttft": (round(sum(done) / len(done), 2)
@@ -444,6 +477,15 @@ def victim_stats(res: WorkloadResult, timeout: float) -> dict:
         "max_completed_ttft": round(max(done), 2) if done else None,
         "timeouts": sum(1 for t in tt if t is None or t >= timeout),
     }
+    # timeout split per SLO class (docs/slo.md) — present only when the
+    # workload tagged requests, so class-blind runs are unchanged
+    by_class: Dict[str, int] = {}
+    for r in res.unique_requests():
+        if r.slo is not None and r.state is RequestState.TIMED_OUT:
+            by_class[r.slo.name] = by_class.get(r.slo.name, 0) + 1
+    if by_class:
+        out["timeouts_by_class"] = by_class
+    return out
 
 
 @dataclasses.dataclass
@@ -507,7 +549,8 @@ class FleetModel:
 
     def __init__(self, params: ServingParams, n_replicas: int = 2,
                  routing: str = "affinity", route_quantum: float = 0.25,
-                 max_retries: int = 0, router_cfg=None):
+                 max_retries: int = 0, router_cfg=None,
+                 autoscaler=None, autoscale_quantum: float = 5.0):
         from repro.fleet.router import FleetRouter, RouterConfig
         self.p = params
         self.n = n_replicas
@@ -522,6 +565,27 @@ class FleetModel:
             stats_fns=[self._stats_fn(i) for i in range(n_replicas)])
         self.route_quantum = route_quantum
         self.max_retries = max_retries
+        # fleet-level SLO mix: classes are drawn at DISPATCH (routing
+        # order) so the spec always carries one and the replicas' own
+        # params-level mixes never double-draw
+        self._slo_mix: Optional[SLOMix] = (
+            SLOMix(parse_slo_mix(params.slo_mix))
+            if params.slo_mix else None)
+        # closed-loop autoscaling (repro.fleet.autoscale): when an
+        # autoscaler is attached, every ``autoscale_quantum`` of fleet
+        # time the loop differences pressure snapshots into
+        # ReplicaSignals, feeds observe(), and ACTS on the
+        # recommendation — scale-up spawns a fresh replica mid-run,
+        # scale-down drains the newest active one (in-flight work
+        # finishes in place; the drain path is the same one
+        # drain_replica_at uses).  scale_log records every action.
+        self.autoscaler = autoscaler
+        self.autoscale_quantum = autoscale_quantum
+        self._active: List[int] = list(range(n_replicas))
+        self._as_prev: Dict[int, object] = {}    # idx -> last PressureStats
+        self._as_prev_resolved: Dict[int, int] = {}
+        self._next_scale = autoscale_quantum
+        self.scale_log: List[Tuple[float, str, int, str]] = []
         self._arrivals: List[Tuple[float, int, dict]] = []   # heap
         self._seq = itertools.count()
         self._sessions: List[dict] = []
@@ -572,11 +636,12 @@ class FleetModel:
 
     def add_request(self, t_arrival: float, n_tokens: int,
                     max_new_tokens: int = 8, is_victim: bool = False,
-                    stream: int = 0, session=None) -> None:
+                    stream: int = 0, session=None,
+                    slo: Optional[SLOClass] = None) -> None:
         """Open-loop arrival, routed at ``t_arrival`` on the fleet clock."""
         heapq.heappush(self._arrivals, (t_arrival, next(self._seq), dict(
             n_tokens=n_tokens, max_new_tokens=max_new_tokens,
-            is_victim=is_victim, stream=stream, session=session)))
+            is_victim=is_victim, stream=stream, session=session, slo=slo)))
 
     def add_session(self, t_start: float, n_requests: int, n_tokens: int,
                     max_new_tokens: int = 8, think: float = 0.5,
@@ -608,6 +673,46 @@ class FleetModel:
 
     # -- fleet loop ----------------------------------------------------------
 
+    # -- autoscaling ---------------------------------------------------------
+
+    def _autoscale_tick(self, now: float) -> None:
+        """One autoscaler observation window: difference each active
+        replica's pressure snapshot into rates, observe(), and act."""
+        from repro.fleet.autoscale import ReplicaSignals
+        signals = []
+        for i in self._active:
+            cur = self.router.stats_fns[i]()
+            prev = self._as_prev.get(i)
+            done = cur.n_finished + cur.n_timed_out
+            resolved = done - self._as_prev_resolved.get(i, 0)
+            signals.append(ReplicaSignals.from_stats(prev, cur, resolved))
+            self._as_prev[i] = cur
+            self._as_prev_resolved[i] = done
+        rec = self.autoscaler.observe(signals)
+        if rec.action == "scale_up":
+            idx = len(self.replicas)
+            m = ServingModel(self.p)
+            m.start()
+            m.advance(now)          # align the newcomer's private clock
+            self.replicas.append(m)
+            self.router.add_replica(self._stats_fn(idx))
+            self._active.append(idx)
+            self.n = len(self.replicas)
+            self.autoscaler.resize(len(self._active))
+            self.scale_log.append((now, "scale_up", len(self._active),
+                                   rec.reason))
+        elif rec.action == "scale_down" and len(self._active) > 1:
+            # drain the NEWEST active replica: route() stops sending it
+            # work, in-flight requests finish in place, and its router
+            # records are released exactly once (same invariant the
+            # manual drain_replica_at path pins)
+            idx = self._active.pop()
+            orphans = self.router.drain(idx)
+            self.drain_log.append((now, idx, orphans))
+            self.autoscaler.resize(len(self._active))
+            self.scale_log.append((now, "scale_down", len(self._active),
+                                   rec.reason))
+
     def _needs_poll(self) -> bool:
         if any(s["cur"] is not None for s in self._sessions):
             return True
@@ -616,13 +721,16 @@ class FleetModel:
     def _dispatch(self, spec: dict, lazy: bool) -> Request:
         base = spec["stream"] << 24
         toks = list(range(base, base + spec["n_tokens"]))
+        slo = spec.get("slo")
+        if slo is None and self._slo_mix is not None:
+            slo = self._slo_mix.next()
         idx = self.router.route(toks, session=spec.get("session"))
         m = self.replicas[idx]
         if lazy:
             m.advance(self._now)
         req = m.inject_now(spec["n_tokens"], spec["max_new_tokens"],
                            is_victim=spec["is_victim"],
-                           stream=spec["stream"])
+                           stream=spec["stream"], slo=slo)
         self.router.record_dispatch(req.req_id, idx)
         self._dispatched.append([req, idx, self.max_retries, False])
         return req
@@ -649,6 +757,11 @@ class FleetModel:
                                     req_id=req.req_id,
                                     is_victim=req.is_victim)
                     clone.prompt_tokens = list(req.prompt_tokens)
+                    # the clone keeps the original's class/timeout
+                    # directly (not via _assign_slo — a retry must not
+                    # advance the mix assigner)
+                    clone.slo = req.slo
+                    clone.timeout = req.timeout
                     new_idx = self.router.route(clone.prompt_tokens,
                                                 exclude=(idx,))
                     self.replicas[new_idx].advance(now)
@@ -675,7 +788,7 @@ class FleetModel:
         # decision point so snapshots are simultaneous
         lazy = (self.router.cfg.policy == "round-robin"
                 and not self._sessions and self.max_retries == 0
-                and not self._drains)
+                and not self._drains and self.autoscaler is None)
         self._now = 0.0
         while self._now < horizon:
             t_next = horizon
@@ -688,6 +801,8 @@ class FleetModel:
                     t_next = min(t_next, s["next_t"])
             if self._needs_poll():
                 t_next = min(t_next, self._now + self.route_quantum)
+            if self.autoscaler is not None:
+                t_next = min(t_next, self._next_scale)
             t_next = min(max(t_next, self._now), horizon)
             if not lazy:
                 for m in self.replicas:
@@ -701,6 +816,13 @@ class FleetModel:
                 _, idx = heapq.heappop(self._drains)
                 orphans = self.router.drain(idx)
                 self.drain_log.append((self._now, idx, orphans))
+            # autoscale ticks fire before same-instant arrivals, so a
+            # request arriving at the tick already routes on the resized
+            # fleet
+            while (self.autoscaler is not None
+                   and self._next_scale <= self._now):
+                self._autoscale_tick(self._now)
+                self._next_scale += self.autoscale_quantum
             if not lazy:
                 self._poll(self._now)
             while self._arrivals and self._arrivals[0][0] <= self._now:
@@ -727,6 +849,9 @@ class FleetModel:
                 self.router.record_done(entry[0].req_id)
         stats = self.router.stats()
         stats["n_fleet_retries"] = self.n_retries
+        if self.autoscaler is not None:
+            stats["scale_log"] = list(self.scale_log)
+            stats["n_replicas_final"] = len(self._active)
         return merge_results(results, router=stats)
 
 
@@ -888,6 +1013,60 @@ def with_hybrid_decode(params: ServingParams, *,
         max_decode_seqs=max_decode_seqs)
     return dataclasses.replace(params, decode_device=decode_device,
                                scheduler=sched)
+
+
+def with_slo(params: ServingParams, mix: str,
+             slo_aware: bool = True) -> ServingParams:
+    """SLO-tier variant of ``params`` (docs/slo.md): requests are tagged
+    per ``mix`` (e.g. ``"interactive:0.3,batch:0.7"``), and the scheduler
+    runs class-aware (deadline-ordered admission, rank-aware victims,
+    overload shedding) unless ``slo_aware=False`` — the class-BLIND
+    baseline that serves the identical tagged workload, so attainment
+    deltas isolate the scheduling policy, not the traffic."""
+    parse_slo_mix(mix)      # validate eagerly, not at first dispatch
+    sched = dataclasses.replace(params.scheduler, slo_aware=slo_aware)
+    return dataclasses.replace(params, slo_mix=mix, scheduler=sched)
+
+
+def mixed_class_workload(params: ServingParams, *, rps: float,
+                         duration: float, interactive_share: float,
+                         interactive_tokens: int = 256,
+                         batch_tokens: int = 6_144,
+                         interactive_new_tokens: int = 16,
+                         batch_new_tokens: int = 32,
+                         horizon: Optional[float] = None) -> WorkloadResult:
+    """Open-loop mixed-class workload: short interactive prompts threaded
+    between long batch prompts at a fixed arrival rate (docs/slo.md).
+
+    The class determines the SHAPE as well as the tag — interactive
+    requests are short-prompt/short-output, batch requests are the long
+    prompts whose chunked prefill occupies the token budget interactive
+    TTFT deadlines are racing against.  Classes are assigned by the
+    deterministic largest-remainder mix, so aware/blind comparisons see
+    the byte-identical arrival sequence."""
+    if not 0.0 <= interactive_share <= 1.0:
+        raise ValueError("interactive_share must be in [0, 1]")
+    model = ServingModel(params)
+    mix_parts = []
+    if interactive_share > 0:
+        mix_parts.append((INTERACTIVE, interactive_share))
+    if interactive_share < 1:
+        mix_parts.append((BATCH, 1.0 - interactive_share))
+    mix = SLOMix(mix_parts)
+    n = int(duration * rps)
+    for i in range(n):
+        cls = mix.next()
+        if cls is INTERACTIVE:
+            n_tok, n_new = interactive_tokens, interactive_new_tokens
+        else:
+            n_tok, n_new = batch_tokens, batch_new_tokens
+        # distinct streams: no cross-request prefix hits muddying the
+        # admission-order comparison
+        model.add_request(i / rps, n_tok, max_new_tokens=n_new,
+                          stream=1 + i, slo=cls)
+    if horizon is None:
+        horizon = duration + 4 * params.timeout
+    return model.run(horizon=horizon)
 
 
 def attacker_victim_workload(params: ServingParams, *, attacker_rps: float,
